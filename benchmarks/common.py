@@ -1,0 +1,17 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, reps=3, warmup=1, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6, out   # us
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

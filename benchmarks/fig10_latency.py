@@ -1,0 +1,26 @@
+"""Fig. 10: L1 access latency vs private cache."""
+import time
+
+import numpy as np
+
+from repro.core import APPS, run_suite
+from benchmarks.common import emit
+
+
+def run(kernels_per_app=1):
+    t0 = time.perf_counter()
+    suite = run_suite(archs=("private", "decoupled", "ata"),
+                      kernels_per_app=kernels_per_app or None)
+    us = (time.perf_counter() - t0) * 1e6
+    ratios_d, ratios_a = [], []
+    for app, res in suite.items():
+        d = res["decoupled"].l1_latency / res["private"].l1_latency
+        a = res["ata"].l1_latency / res["private"].l1_latency
+        ratios_d.append(d)
+        ratios_a.append(a)
+        emit(f"fig10.{app}.decoupled_latency_x", us / 30, f"{d:.3f}")
+        emit(f"fig10.{app}.ata_latency_x", us / 30, f"{a:.3f}")
+    emit("fig10.decoupled_latency_increase_pct", us,
+         f"{100*(np.mean(ratios_d)-1):.1f}")
+    emit("fig10.ata_latency_increase_pct", us,
+         f"{100*(np.mean(ratios_a)-1):.1f}")

@@ -1,0 +1,24 @@
+"""Fig. 8: overall IPC of the four architectures, normalized to the
+private cache, over the ten-app suite."""
+import time
+
+from repro.core import (APPS, HIGH_LOCALITY, LOW_LOCALITY, geomean,
+                        normalized_ipc, run_suite)
+from benchmarks.common import emit
+
+
+def run(kernels_per_app=1):
+    t0 = time.perf_counter()
+    suite = run_suite(kernels_per_app=kernels_per_app or None)
+    ipc = normalized_ipc(suite)
+    us = (time.perf_counter() - t0) * 1e6
+    for app in list(HIGH_LOCALITY) + list(LOW_LOCALITY):
+        emit(f"fig8.{app}.ata_vs_private", us / 40,
+             f"{ipc[app]['ata']:.3f}")
+        emit(f"fig8.{app}.decoupled_vs_private", us / 40,
+             f"{ipc[app]['decoupled']:.3f}")
+    hi = geomean([ipc[a]["ata"] for a in HIGH_LOCALITY])
+    lo = geomean([ipc[a]["ata"] for a in LOW_LOCALITY])
+    emit("fig8.ata_gain_high_locality_pct", us, f"{100*(hi-1):.1f}")
+    emit("fig8.ata_gain_low_locality_pct", us, f"{100*(lo-1):.1f}")
+    return {"hi": hi, "lo": lo}

@@ -1,0 +1,23 @@
+"""Fig. 9: per-kernel IPC for SN, conv3d, HS3D, sradv1."""
+import time
+
+from repro.core import APPS, normalized_ipc, run_suite
+from benchmarks.common import emit
+
+FIG9_APPS = ("SN", "conv3d", "HS3D", "sradv1")
+
+
+def run(kernels_per_app=4):
+    t0 = time.perf_counter()
+    suite = run_suite(apps=FIG9_APPS, archs=("private", "decoupled", "ata"),
+                      kernels_per_app=kernels_per_app or None)
+    us = (time.perf_counter() - t0) * 1e6
+    for app in FIG9_APPS:
+        res = suite[app]
+        n = len(res["ata"].per_kernel)
+        for k in range(n):
+            base = res["private"].per_kernel[k].ipc
+            emit(f"fig9.{app}.k{k}.ata", us / (3 * n),
+                 f"{res['ata'].per_kernel[k].ipc / base:.3f}")
+            emit(f"fig9.{app}.k{k}.decoupled", us / (3 * n),
+                 f"{res['decoupled'].per_kernel[k].ipc / base:.3f}")

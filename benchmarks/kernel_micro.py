@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+On this CPU container the interpret path measures semantics, not TPU
+speed; the ref path is the XLA-compiled oracle. us_per_call reported
+for both; derived = max |err| vs oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from benchmarks.common import emit, time_call
+
+RNG = np.random.default_rng(0)
+
+
+def run():
+    # ata_tag_probe
+    C, S, W, R = 16, 8, 64, 1024
+    tags = jnp.asarray(RNG.integers(0, 4096, (C, S, W)), jnp.int32)
+    valid = jnp.asarray(RNG.random((C, S, W)) < 0.7)
+    qtag = jnp.asarray(RNG.integers(0, 4096, R), jnp.int32)
+    set_idx = jnp.asarray(RNG.integers(0, S, R), jnp.int32)
+    us_ref, (h2, _) = time_call(ops.ata_probe, set_idx, qtag, tags, valid,
+                                impl="ref")
+    us_int, (h1, _) = time_call(ops.ata_probe, set_idx, qtag, tags, valid,
+                                impl="interpret")
+    emit("kernel.ata_tag_probe.ref", us_ref,
+         f"R={R};C={C};hits={int(h2.sum())}")
+    emit("kernel.ata_tag_probe.interpret", us_int,
+         f"mismatch={int((h1 != h2).sum())}")
+
+    # flash attention
+    q = jnp.asarray(RNG.standard_normal((2, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 512, 64)), jnp.float32)
+    us_ref, o2 = time_call(ops.attention, q, k, v, impl="ref")
+    us_int, o1 = time_call(ops.attention, q, k, v, impl="interpret")
+    emit("kernel.flash_attention.ref", us_ref, "B2H8T512D64")
+    emit("kernel.flash_attention.interpret", us_int,
+         f"maxerr={float(jnp.abs(o1-o2).max()):.2e}")
+
+    # wkv6
+    B, H, T, K = 2, 4, 512, 64
+    r = jnp.asarray(RNG.standard_normal((B, H, T, K)) * .5, jnp.float32)
+    kk = jnp.asarray(RNG.standard_normal((B, H, T, K)) * .5, jnp.float32)
+    vv = jnp.asarray(RNG.standard_normal((B, H, T, K)) * .5, jnp.float32)
+    w = -jnp.exp(jnp.asarray(RNG.standard_normal((B, H, T, K)), jnp.float32))
+    u = jnp.asarray(RNG.standard_normal((H, K)) * .5, jnp.float32)
+    us_ref, (o2, _) = time_call(ops.wkv6, r, kk, vv, w, u, impl="ref")
+    us_int, (o1, _) = time_call(ops.wkv6, r, kk, vv, w, u,
+                                impl="interpret")
+    emit("kernel.wkv6.ref_scan", us_ref, "B2H4T512K64")
+    emit("kernel.wkv6.interpret_chunked", us_int,
+         f"maxerr={float(jnp.abs(o1-o2).max()):.2e}")

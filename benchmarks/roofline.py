@@ -1,0 +1,70 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and the
+roofline fraction = (MODEL_FLOPS/chips/peak) / max(term) — the score a
+perfect-efficiency implementation would push to 1.0.
+"""
+import glob
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+PEAK_FLOPS = 197e12
+
+
+def load(mesh="sp"):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        rows.append(r)
+    return rows
+
+
+def fraction(r):
+    if r["status"] != "ok":
+        return None
+    t = r["roofline"]
+    ideal = t["model_flops_global"] / r["chips"] / PEAK_FLOPS
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return ideal / bound if bound else None
+
+
+def table(mesh="sp"):
+    rows = []
+    for r in load(mesh):
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "SKIP", r.get("reason", "")))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERR", r.get("error", "")[:60]))
+            continue
+        t = r["roofline"]
+        frac = fraction(r)
+        rows.append((
+            r["arch"], r["shape"], t["dominant"],
+            f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+            f"{t['collective_s']:.4f}",
+            f"{t['useful_flops_ratio']:.2f}" if t["useful_flops_ratio"] else "-",
+            f"{frac:.3f}" if frac else "-",
+            f"{r['memory']['peak_estimate_gb']:.1f}GB",
+        ))
+    return rows
+
+
+def main():
+    for mesh, name in (("sp", "single-pod 16x16"), ("mp", "multi-pod 2x16x16")):
+        print(f"\n=== roofline: {name} ===")
+        print(f"{'arch':22s} {'shape':12s} {'bound':10s} {'comp_s':>8s} "
+              f"{'mem_s':>8s} {'coll_s':>8s} {'useful':>6s} {'frac':>6s} {'peak':>8s}")
+        for row in table(mesh):
+            if row[2] in ("SKIP", "ERR"):
+                print(f"{row[0]:22s} {row[1]:12s} {row[2]:10s} {row[3][:50]}")
+            else:
+                print(f"{row[0]:22s} {row[1]:12s} {row[2]:10s} "
+                      f"{row[3]:>8s} {row[4]:>8s} {row[5]:>8s} {row[6]:>6s} "
+                      f"{row[7]:>6s} {row[8]:>8s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""ATA serving cache vs baselines (paper SIII adapted to serving)."""
+import time
+
+from repro.serving import AtaCacheConfig, POLICIES, run_workload, \
+    synth_requests
+from benchmarks.common import emit
+
+
+def run():
+    cfg = AtaCacheConfig(n_shards=8)
+    reqs = synth_requests(300, n_shards=8, shared_frac=0.75, seed=1)
+    for pol in POLICIES:
+        t0 = time.perf_counter()
+        s = run_workload(pol, cfg, reqs)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"serving.{pol}.hit_rate", us, f"{s.hit_rate:.3f}")
+        emit(f"serving.{pol}.probe_messages", us, s.probe_messages)
+        emit(f"serving.{pol}.remote_fetch_blocks", us,
+             s.remote_fetch_blocks)
+        emit(f"serving.{pol}.local_hits", us, s.local_hits)

@@ -1,0 +1,22 @@
+"""Table I landscape: hit rate / L2 demand / NoC contention per design."""
+import time
+
+import numpy as np
+
+from repro.core import HIGH_LOCALITY, run_suite
+from benchmarks.common import emit
+
+
+def run(kernels_per_app=1):
+    t0 = time.perf_counter()
+    suite = run_suite(apps=HIGH_LOCALITY,
+                      kernels_per_app=kernels_per_app or None)
+    us = (time.perf_counter() - t0) * 1e6
+    for arch in ("private", "remote", "decoupled", "ata"):
+        hr = np.mean([suite[a][arch].l1_hit_rate for a in suite])
+        l2 = np.mean([suite[a][arch].l2_accesses for a in suite])
+        noc = np.mean([suite[a][arch].per_kernel[0].noc_flits
+                       for a in suite])
+        emit(f"table1.{arch}.l1_hit_rate", us / 20, f"{hr:.3f}")
+        emit(f"table1.{arch}.l2_accesses", us / 20, f"{l2:.0f}")
+        emit(f"table1.{arch}.noc_flits", us / 20, f"{noc:.0f}")

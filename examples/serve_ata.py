@@ -1,0 +1,17 @@
+"""Serve a smoke model with batched requests through the ATA prefix
+cache, comparing all four sharing policies end to end (real model KV
+payloads, real decode). Reproduces the paper's Table-I landscape in the
+serving domain: ATA = sharing hit-rate of remote/decoupled with zero
+probe traffic and mostly-local service.
+
+Run:  PYTHONPATH=src python examples/serve_ata.py
+"""
+import subprocess
+import sys
+
+for policy in ("private", "remote", "decoupled", "ata"):
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-0.6b",
+         "--smoke", "--requests", "12", "--decode-steps", "4",
+         "--policy", policy],
+        check=True)

@@ -1,0 +1,30 @@
+"""Calibration harness: suite summary vs paper targets."""
+import sys, time
+import numpy as np
+from repro.core import (APPS, HIGH_LOCALITY, LOW_LOCALITY, run_suite,
+                        normalized_ipc, geomean)
+
+kpa = int(sys.argv[1]) if len(sys.argv) > 1 else 1
+t0 = time.time()
+suite = run_suite(kernels_per_app=kpa)
+ipc = normalized_ipc(suite)
+print(f"{'app':10s} {'cls':4s} | {'ATA':>6s} {'dec':>6s} {'rem':>6s} | "
+      f"{'L1lat A':>8s} {'L1lat D':>8s} | {'HR p':>5s} {'HR a':>5s} {'HR d':>5s}")
+for app in list(HIGH_LOCALITY) + list(LOW_LOCALITY):
+    r = suite[app]
+    lat = {a: r[a].l1_latency / r["private"].l1_latency for a in r}
+    print(f"{app:10s} {'HI' if APPS[app].high_locality else 'LO':4s} | "
+          f"{ipc[app]['ata']:6.3f} {ipc[app]['decoupled']:6.3f} {ipc[app]['remote']:6.3f} | "
+          f"{lat['ata']:8.3f} {lat['decoupled']:8.3f} | "
+          f"{r['private'].l1_hit_rate:5.2f} {r['ata'].l1_hit_rate:5.2f} {r['decoupled'].l1_hit_rate:5.2f}")
+hi_ata = geomean([ipc[a]["ata"] for a in HIGH_LOCALITY])
+lo_ata = geomean([ipc[a]["ata"] for a in LOW_LOCALITY])
+lo_dec = geomean([ipc[a]["decoupled"] for a in LOW_LOCALITY])
+lat_a = np.mean([suite[a]["ata"].l1_latency / suite[a]["private"].l1_latency for a in APPS])
+lat_d = np.mean([suite[a]["decoupled"].l1_latency / suite[a]["private"].l1_latency for a in APPS])
+lat_dmax = max(suite[a]["decoupled"].l1_latency / suite[a]["private"].l1_latency for a in APPS)
+print(f"\nATA hi-loc IPC gain : {100*(hi_ata-1):+6.1f}%   (paper +12.0%)")
+print(f"ATA lo-loc IPC gain : {100*(lo_ata-1):+6.1f}%   (paper ~0%, no impairment)")
+print(f"ATA/dec lo-loc      : {100*(lo_ata/lo_dec-1):+6.1f}%   (paper +22.9%)")
+print(f"L1 lat: dec {100*(lat_d-1):+6.1f}% (paper +67.2%, max {lat_dmax:.2f}x vs 2.74x) | ata {100*(lat_a-1):+6.1f}% (paper +6.0%)")
+print(f"[{time.time()-t0:.0f}s]")

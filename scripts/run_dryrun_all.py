@@ -1,0 +1,82 @@
+"""Run every (arch x shape x mesh) dry-run cell, one subprocess per cell
+(jax locks the host-device count per process). Cells already recorded in
+results/dryrun/ are skipped unless --force. Order: one representative
+cell per risk class first (fail fast), then all single-pod, then
+multi-pod."""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+
+ARCHS = ["rwkv6-3b", "qwen3-0.6b", "qwen1.5-4b", "nemotron-4-15b",
+         "stablelm-12b", "granite-moe-3b-a800m", "granite-moe-1b-a400m",
+         "recurrentgemma-9b", "whisper-tiny", "chameleon-34b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+PREFLIGHT = [("rwkv6-3b", "long_500k", False),
+             ("whisper-tiny", "train_4k", False),
+             ("granite-moe-1b-a400m", "train_4k", False),
+             ("recurrentgemma-9b", "decode_32k", False),
+             ("qwen1.5-4b", "decode_32k", False),
+             ("chameleon-34b", "train_4k", True)]
+
+
+def cells():
+    seen = set()
+    for c in PREFLIGHT:
+        seen.add(c)
+        yield c
+    for mp in (False, True):
+        for a in ARCHS:
+            for s in SHAPES:
+                c = (a, s, mp)
+                if c not in seen:
+                    yield c
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    for arch, shape, mp in cells():
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+        out = RESULTS / f"{tag}.json"
+        if out.exists() and not args.force:
+            st = json.loads(out.read_text()).get("status")
+            if st in ("ok", "skipped"):
+                print(f"[sweep] {tag}: cached ({st})", flush=True)
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            r = subprocess.run(
+                cmd, cwd=ROOT, timeout=args.timeout,
+                env={**__import__("os").environ,
+                     "PYTHONPATH": str(ROOT / "src")},
+                capture_output=True, text=True)
+            tail = (r.stdout or "").strip().splitlines()
+            print(f"[sweep] {tag}: {tail[-1] if tail else r.returncode} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+            if r.returncode != 0 and not out.exists():
+                out.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "status": "error",
+                     "error": (r.stderr or "")[-3000:]}))
+        except subprocess.TimeoutExpired:
+            out.write_text(json.dumps(
+                {"arch": arch, "shape": shape, "status": "error",
+                 "error": f"timeout {args.timeout}s"}))
+            print(f"[sweep] {tag}: TIMEOUT", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Assigned input-shape set (same four cells for every LM arch).
+
+train_* lowers train_step; prefill_* lowers a full-sequence forward;
+decode_*/long_* lower serve_step (one new token against a KV cache of
+seq_len). long_500k requires sub-quadratic attention and only runs for
+SSM/hybrid archs (see DESIGN.md shape-skip table).
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 0.5M-token dense KV cache is the "
+                "quadratic cost this shape excludes (DESIGN.md)")
+    return None

@@ -1,0 +1,22 @@
+"""ATA-Cache core: the paper's contribution as a composable JAX library.
+
+Public API:
+  GpuGeometry, PAPER_GEOMETRY — simulated GPU (paper Table II)
+  simulate, Trace, SimResult  — run one trace through one architecture
+  ARCHITECTURES               — ("private", "remote", "decoupled", "ata")
+  APPS, make_trace            — calibrated workload suite
+  run_app, run_suite, normalized_ipc — experiment drivers
+"""
+from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+from repro.core.simulator import ARCHITECTURES, SimResult, Trace, simulate
+from repro.core.workloads import (APPS, HIGH_LOCALITY, LOW_LOCALITY,
+                                  AppParams, make_trace)
+from repro.core.metrics import (AppResult, geomean, normalized_ipc, run_app,
+                                run_suite)
+
+__all__ = [
+    "GpuGeometry", "PAPER_GEOMETRY", "ARCHITECTURES", "SimResult", "Trace",
+    "simulate", "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
+    "make_trace", "AppResult", "geomean", "normalized_ipc", "run_app",
+    "run_suite",
+]

@@ -1,0 +1,32 @@
+"""Vectorized contention primitives.
+
+The paper's contention effects (decoupled-sharing bank conflicts, ATA
+remote-port conflicts, remote-sharing probe queues, L2 partition queues)
+are all instances of one primitive: requests arriving at a keyed resource
+in the same round are served serially, so request *i* waits
+``rank_i * svc`` cycles where ``rank_i`` is its position within its
+conflict group.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def group_rank(keys: jnp.ndarray, mask: jnp.ndarray, n_keys: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank of each masked request within its key group, and group size.
+
+    keys : (R,) int32 in [0, n_keys); mask : (R,) bool.
+    rank : (R,) int32 — #earlier masked requests with the same key (0 if
+           unmasked); size : (R,) int32 — total masked requests in group.
+    """
+    onehot = (keys[:, None] == jnp.arange(n_keys)[None, :]) & mask[:, None]
+    counts = onehot.sum(axis=0)                           # (K,)
+    before = jnp.cumsum(onehot, axis=0) - onehot          # exclusive
+    rank = jnp.take_along_axis(before, keys[:, None], axis=1)[:, 0]
+    size = counts[keys]
+    rank = jnp.where(mask, rank, 0)
+    size = jnp.where(mask, size, 0)
+    return rank.astype(jnp.int32), size.astype(jnp.int32)

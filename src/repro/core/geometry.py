@@ -1,0 +1,57 @@
+"""GPU geometry + timing model constants (paper Table II).
+
+The simulated GPU matches the paper's GPGPU-sim v4.0 configuration:
+30 SIMT cores in 3 clusters of 10, 64KB 64-way L1 per core (128B lines,
+8 sets, 4 banks, 32-cycle latency), 24x128KB 16-way L2 partitions
+(188-cycle latency), crossbar NoC.
+
+Service times model *occupancy* (throughput contention); latencies model
+the uncontended critical path. The `hide` divisor models warp-level
+latency hiding (4 GTO schedulers / core, deep multithreading).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuGeometry:
+    # --- organization -----------------------------------------------------
+    n_cores: int = 30
+    cluster_size: int = 10
+    # L1: 64KB / 128B lines = 512 lines, 64-way -> 8 sets, 4 banks
+    l1_sets: int = 8
+    l1_ways: int = 64
+    l1_banks: int = 4
+    # L2: 24 partitions x 128KB / 128B = 1024 lines, 16-way -> 64 sets
+    l2_parts: int = 24
+    l2_sets: int = 64
+    l2_ways: int = 16
+
+    # --- uncontended latencies (cycles) ------------------------------------
+    lat_l1: int = 32
+    lat_xbar: int = 2        # ATA intra-cluster crossbar hop (data transfer)
+    lat_home: int = 16       # decoupled-sharing core->home NoC round trip
+    lat_l2: int = 188
+    lat_dram: int = 320
+    lat_probe: int = 24      # remote-sharing probe round-trip (uncontended)
+
+    # --- service / occupancy times (cycles per request at the resource) ----
+    svc_bank: int = 8        # decoupled-sharing home-cache bank port
+    svc_port: int = 2        # ATA remote-data port
+    svc_probe: int = 1       # remote-sharing tag-probe service per probe
+    svc_l2: int = 4          # L2 partition port
+    flits_per_line: int = 4  # 128B line / 40B flit (rounded up)
+    noc_bw: float = 16.0     # flits/cycle the probe network sustains/cluster
+
+    # --- core pipeline model ------------------------------------------------
+    issue_rate: float = 4.0  # peak insn/cycle/core (4 GTO schedulers)
+    hide: float = 10.0       # warp-level latency-hiding divisor
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_cores // self.cluster_size
+
+
+#: Default geometry = paper Table II.
+PAPER_GEOMETRY = GpuGeometry()

@@ -1,0 +1,73 @@
+"""Experiment driver + paper-figure summaries over the simulator."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+from repro.core.simulator import ARCHITECTURES, SimResult, simulate
+from repro.core.workloads import APPS, AppParams, make_trace
+
+
+@dataclasses.dataclass
+class AppResult:
+    app: str
+    arch: str
+    per_kernel: List[SimResult]
+
+    @property
+    def ipc(self) -> float:
+        # whole-app IPC = total instructions / total cycles across kernels
+        insns = sum(r.instructions for r in self.per_kernel)
+        cycles = sum(r.cycles for r in self.per_kernel)
+        return insns / cycles
+
+    @property
+    def l1_latency(self) -> float:
+        return float(np.mean([r.l1_latency for r in self.per_kernel]))
+
+    @property
+    def l1_hit_rate(self) -> float:
+        return float(np.mean([r.l1_hit_rate for r in self.per_kernel]))
+
+    @property
+    def l2_accesses(self) -> float:
+        return float(sum(r.l2_accesses for r in self.per_kernel))
+
+
+def run_app(app: str, arch: str, geom: GpuGeometry = PAPER_GEOMETRY,
+            kernels: Optional[Iterable[int]] = None,
+            params: Optional[AppParams] = None) -> AppResult:
+    p = params if params is not None else APPS[app]
+    ks = list(kernels) if kernels is not None else range(p.n_kernels)
+    results = [simulate(arch, make_trace(p, n_cores=geom.n_cores, kernel=k),
+                        geom) for k in ks]
+    return AppResult(app, arch, results)
+
+
+def run_suite(apps: Optional[Iterable[str]] = None,
+              archs: Iterable[str] = ARCHITECTURES,
+              geom: GpuGeometry = PAPER_GEOMETRY,
+              kernels_per_app: Optional[int] = None,
+              ) -> Dict[str, Dict[str, AppResult]]:
+    """{app: {arch: AppResult}} over the benchmark suite."""
+    out: Dict[str, Dict[str, AppResult]] = {}
+    for app in (apps or APPS):
+        ks = (range(min(kernels_per_app, APPS[app].n_kernels))
+              if kernels_per_app else None)
+        out[app] = {arch: run_app(app, arch, geom, kernels=ks)
+                    for arch in archs}
+    return out
+
+
+def normalized_ipc(suite: Dict[str, Dict[str, AppResult]],
+                   base: str = "private") -> Dict[str, Dict[str, float]]:
+    return {app: {arch: r[arch].ipc / r[base].ipc for arch in r}
+            for app, r in suite.items()}
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = list(xs)
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,305 @@
+"""Cache-hierarchy simulator: private / remote-sharing / decoupled / ATA.
+
+One ``lax.scan`` step models one *round*: every core issues ``m`` memory
+requests (one coalesced load instruction). Within a round the four
+architectures differ only in routing and contention:
+
+  private    : local L1 -> L2
+  remote     : local L1 -> broadcast probes to cluster peers (NoC queue +
+               probe service queue on the critical path) -> remote fetch
+               or L2 *after* the probe round-trip  [Dublish'16, Ibrahim'19]
+  decoupled  : address-sliced home cache; every request pays the home
+               bank-port queue                       [Ibrahim'20/'21]
+  ata        : aggregated tag array probed in parallel at zero added
+               latency; only *known* remote hits cross the crossbar;
+               writes are local-only with dirty-bit L2 diversion  [paper]
+
+Latency composition feeds a warp-level hiding model to produce IPC, and
+the L1-complex portion of each request's latency reproduces Fig. 10.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tagarray
+from repro.core.contention import group_rank
+from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+
+ARCHITECTURES = ("private", "remote", "decoupled", "ata")
+
+#: Cycles to detect an L1 miss (tag check before dispatching onwards).
+TAG_CHECK = 8
+
+
+class Trace(NamedTuple):
+    addr: np.ndarray       # (T, C, m) int32 line addresses
+    is_write: np.ndarray   # (T, C, m) bool
+    insn_per_req: float    # non-memory instructions amortized per request
+
+
+class SimResult(NamedTuple):
+    ipc: float
+    l1_latency: float          # mean per-load L1-complex completion time
+    local_hit_rate: float
+    remote_hit_rate: float     # served by a peer L1 (0 for private/decoupled)
+    l1_hit_rate: float         # served anywhere in the L1 complex
+    l2_accesses: float
+    dram_accesses: float
+    noc_flits: float
+    cycles: float
+    instructions: float
+
+
+def _l1_state(geom: GpuGeometry) -> tagarray.TagState:
+    return tagarray.init_tag_state(geom.n_cores, geom.l1_sets, geom.l1_ways)
+
+
+def _l2_state(geom: GpuGeometry) -> tagarray.TagState:
+    return tagarray.init_tag_state(geom.l2_parts, geom.l2_sets, geom.l2_ways)
+
+
+def _round(arch: str, geom: GpuGeometry, insn_per_req, state, xs):
+    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write)."""
+    l1, l2, t, stats = state
+    addr, is_write = xs                      # (C, m)
+    C, m = addr.shape
+    R = C * m
+    addr = addr.reshape(R)
+    is_write = is_write.reshape(R)
+    core = jnp.repeat(jnp.arange(C, dtype=jnp.int32), m)
+    cluster = core // geom.cluster_size
+    self_slot = core % geom.cluster_size
+    set_idx = (addr % geom.l1_sets).astype(jnp.int32)
+    bank = set_idx % geom.l1_banks
+    peers = (cluster[:, None] * geom.cluster_size
+             + jnp.arange(geom.cluster_size, dtype=jnp.int32)[None, :])
+
+    zero = jnp.zeros((R,), jnp.float32)
+    noc_flits = 0.0
+
+    occupancy = jnp.zeros((R,), jnp.float32)
+
+    if arch == "private":
+        hit, way, _ = tagarray.probe(l1, core, set_idx, addr)
+        served = hit
+        l1_time = jnp.where(hit, float(geom.lat_l1), float(TAG_CHECK))
+        go_l2 = ~hit
+        pre_l2 = jnp.full((R,), float(TAG_CHECK))
+        fill_cache, fill_set = core, set_idx
+        local_hits = hit
+        remote_hits = jnp.zeros((R,), bool)
+        l1 = tagarray.touch(l1, core, set_idx, way, t, hit,
+                            set_dirty=is_write)
+
+    elif arch == "decoupled":
+        home = cluster * geom.cluster_size + (addr % geom.cluster_size)
+        home_set = ((addr // geom.cluster_size) % geom.l1_sets).astype(jnp.int32)
+        home_bank = home_set % geom.l1_banks
+        hit, way, _ = tagarray.probe(l1, home, home_set, addr)
+        # every request, hit or miss, pays the home bank-port queue; the
+        # bank is a serial resource, so its busy time is also a
+        # throughput (occupancy) bound warps cannot hide.
+        key = home * geom.l1_banks + home_bank
+        rank, size = group_rank(key, jnp.ones((R,), bool),
+                                geom.n_cores * geom.l1_banks)
+        delay = rank.astype(jnp.float32) * geom.svc_bank
+        occupancy = size.astype(jnp.float32) * geom.svc_bank
+        served = hit
+        l1_time = jnp.where(hit,
+                            geom.lat_l1 + geom.lat_home + delay,
+                            TAG_CHECK + delay)
+        go_l2 = ~hit
+        pre_l2 = TAG_CHECK + delay
+        fill_cache, fill_set = home, home_set
+        local_hits = hit
+        remote_hits = jnp.zeros((R,), bool)
+        noc_flits = noc_flits + jnp.sum(hit) * geom.flits_per_line
+        l1 = tagarray.touch(l1, home, home_set, way, t, hit,
+                            set_dirty=is_write)
+
+    elif arch == "remote":
+        hit, way, _ = tagarray.probe(l1, core, set_idx, addr)
+        miss = ~hit
+        # broadcast probes: each miss queries all peers; probe service
+        # queue per cluster + NoC load delay sit on the critical path.
+        rank, n_miss = group_rank(cluster, miss, geom.n_clusters)
+        probe_flits = n_miss.astype(jnp.float32) * (geom.cluster_size - 1)
+        noc_delay = probe_flits / geom.noc_bw
+        probe_wait = (geom.lat_probe + rank.astype(jnp.float32)
+                      * geom.svc_probe + noc_delay)
+        rhits, rways, _ = tagarray.probe_many(l1, peers, set_idx, addr)
+        rhits = rhits & (jnp.arange(geom.cluster_size)[None, :]
+                         != self_slot[:, None])
+        remote_hit = miss & rhits.any(axis=-1)
+        src_slot = jnp.argmax(rhits, axis=-1)
+        src_cache = cluster * geom.cluster_size + src_slot
+        prank, psize = group_rank(src_cache, remote_hit, geom.n_cores)
+        xfer = geom.lat_xbar + prank.astype(jnp.float32) * geom.svc_port
+        # every peer cache's tag port serves every probe in the cluster
+        occupancy = jnp.where(
+            miss, n_miss.astype(jnp.float32) * geom.svc_probe, 0.0)
+        occupancy = jnp.maximum(
+            occupancy,
+            jnp.where(remote_hit,
+                      psize.astype(jnp.float32) * geom.svc_port, 0.0))
+        served = hit | remote_hit
+        l1_time = jnp.where(hit, float(geom.lat_l1),
+                            TAG_CHECK + probe_wait
+                            + jnp.where(remote_hit, xfer, 0.0))
+        go_l2 = miss & ~remote_hit
+        pre_l2 = TAG_CHECK + probe_wait          # probes extend L2 path
+        fill_cache, fill_set = core, set_idx
+        local_hits = hit
+        remote_hits = remote_hit
+        noc_flits = (noc_flits + jnp.sum(miss) * (geom.cluster_size - 1)
+                     + jnp.sum(remote_hit) * geom.flits_per_line)
+        l1 = tagarray.touch(l1, core, set_idx, way, t, hit,
+                            set_dirty=is_write)
+
+    elif arch == "ata":
+        # aggregated tag array: all cluster tags compared in parallel,
+        # zero added latency, zero probe traffic.
+        hits, ways, dirt = tagarray.probe_many(l1, peers, set_idx, addr)
+        is_self = (jnp.arange(geom.cluster_size)[None, :]
+                   == self_slot[:, None])
+        local_hit = (hits & is_self).any(axis=-1)
+        way = jnp.where(local_hit,
+                        jnp.take_along_axis(
+                            ways, self_slot[:, None], axis=1)[:, 0],
+                        tagarray.probe(l1, core, set_idx, addr)[1])
+        rmask = hits & ~is_self
+        any_remote = rmask.any(axis=-1)
+        src_slot = jnp.argmax(rmask, axis=-1)
+        src_cache = cluster * geom.cluster_size + src_slot
+        src_dirty = jnp.take_along_axis(dirt, src_slot[:, None],
+                                        axis=1)[:, 0]
+        # writes are local-only (paper coherence rule); dirty remote
+        # copies divert the read to L2.
+        remote_ok = (~is_write) & (~local_hit) & any_remote & (~src_dirty)
+        prank, psize = group_rank(src_cache, remote_ok, geom.n_cores)
+        # only *actual* remote hits occupy the remote data port — the
+        # filtering that is the paper's core contention win.
+        occupancy = jnp.where(
+            remote_ok, psize.astype(jnp.float32) * geom.svc_port, 0.0)
+        served = local_hit | remote_ok
+        l1_time = jnp.where(
+            local_hit, float(geom.lat_l1),
+            jnp.where(remote_ok,
+                      geom.lat_l1 + geom.lat_xbar
+                      + prank.astype(jnp.float32) * geom.svc_port,
+                      float(TAG_CHECK)))
+        go_l2 = ~served
+        pre_l2 = jnp.full((R,), float(TAG_CHECK))
+        fill_cache, fill_set = core, set_idx
+        local_hits = local_hit
+        remote_hits = remote_ok
+        noc_flits = noc_flits + jnp.sum(remote_ok) * geom.flits_per_line
+        l1 = tagarray.touch(l1, core, set_idx, way, t, local_hit,
+                            set_dirty=is_write)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown architecture {arch!r}")
+
+    # ---- L2 stage ---------------------------------------------------------
+    l2_part = (addr % geom.l2_parts).astype(jnp.int32)
+    l2_set = ((addr // geom.l2_parts) % geom.l2_sets).astype(jnp.int32)
+    l2_hit, l2_way, _ = tagarray.probe(l2, l2_part, l2_set, addr)
+    l2_rank, l2_size = group_rank(l2_part, go_l2, geom.l2_parts)
+    l2_time = (geom.lat_l2 + l2_rank.astype(jnp.float32) * geom.svc_l2
+               + jnp.where(l2_hit, 0.0, float(geom.lat_dram)))
+    occupancy = jnp.maximum(
+        occupancy,
+        jnp.where(go_l2, l2_size.astype(jnp.float32) * geom.svc_l2, 0.0))
+    l2 = tagarray.touch(l2, l2_part, l2_set, l2_way, t, go_l2 & l2_hit)
+    l2, _ = tagarray.fill(l2, l2_part, l2_set, l2_way, addr, t,
+                          go_l2 & ~l2_hit)
+    noc_flits = noc_flits + jnp.sum(go_l2) * geom.flits_per_line
+
+    # ---- L1 fill on L2 return (and on remote fetch: replicate locally) ----
+    fill_mask = go_l2 | remote_hits
+    _, fway, _ = tagarray.probe(l1, fill_cache, fill_set, addr)
+    l1, wb = tagarray.fill(l1, fill_cache, fill_set, fway, addr, t,
+                           fill_mask, dirty=is_write)
+    noc_flits = noc_flits + jnp.sum(wb) * geom.flits_per_line
+
+    # ---- timing ------------------------------------------------------------
+    latency = jnp.where(served, l1_time, pre_l2 + l2_time)     # (R,)
+    # Warp multithreading hides individual request latencies; the core's
+    # sustained pace is set by *mean* outstanding latency per load, while
+    # serial-resource occupancy is a hard throughput bound (max over m).
+    per_core_lat = latency.reshape(C, m).mean(axis=1)
+    per_core_occ = occupancy.reshape(C, m).max(axis=1)
+    pace = m * insn_per_req / geom.issue_rate
+    round_cost = jnp.maximum(jnp.maximum(pace, per_core_occ),
+                             per_core_lat / geom.hide)         # (C,)
+
+    # Fig.10 metric: completion time of the L1 accesses of one load
+    # instruction, over loads fully served by the L1 complex.
+    all_served = served.reshape(C, m).all(axis=1)
+    l1_complete = l1_time.reshape(C, m).max(axis=1)
+
+    stats = {
+        "cycles": stats["cycles"] + round_cost,
+        "l1_lat_sum": stats["l1_lat_sum"]
+        + jnp.sum(jnp.where(all_served, l1_complete, 0.0)),
+        "l1_lat_n": stats["l1_lat_n"] + jnp.sum(all_served),
+        "local_hits": stats["local_hits"] + jnp.sum(local_hits),
+        "remote_hits": stats["remote_hits"] + jnp.sum(remote_hits),
+        "requests": stats["requests"] + R,
+        "l2_accesses": stats["l2_accesses"] + jnp.sum(go_l2),
+        "dram": stats["dram"] + jnp.sum(go_l2 & ~l2_hit),
+        "noc_flits": stats["noc_flits"] + noc_flits,
+    }
+    return (l1, l2, t + 1, stats), None
+
+
+def _init_stats(geom: GpuGeometry) -> Dict[str, jnp.ndarray]:
+    z = jnp.float32(0.0)
+    return {"cycles": jnp.zeros((geom.n_cores,), jnp.float32),
+            "l1_lat_sum": z, "l1_lat_n": z, "local_hits": z,
+            "remote_hits": z, "requests": z, "l2_accesses": z,
+            "dram": z, "noc_flits": z}
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def _simulate(arch: str, trace_arrays, insn_per_req: float,
+              geom: GpuGeometry):
+    addr, is_write = trace_arrays
+    state = (_l1_state(geom), _l2_state(geom), jnp.int32(0),
+             _init_stats(geom))
+    step = functools.partial(_round, arch, geom, insn_per_req)
+    (l1, l2, t, stats), _ = jax.lax.scan(step, state, (addr, is_write))
+    return stats
+
+
+def simulate(arch: str, trace: Trace,
+             geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
+    """Run a trace through one architecture and summarize."""
+    if arch not in ARCHITECTURES:
+        raise ValueError(f"arch must be one of {ARCHITECTURES}")
+    addr = jnp.asarray(trace.addr, jnp.int32)
+    is_write = jnp.asarray(trace.is_write, bool)
+    stats = jax.device_get(
+        _simulate(arch, (addr, is_write), float(trace.insn_per_req), geom))
+    T, C, m = trace.addr.shape
+    instructions = T * C * m * trace.insn_per_req
+    cycles = float(stats["cycles"].max())
+    requests = float(stats["requests"])
+    local = float(stats["local_hits"])
+    remote = float(stats["remote_hits"])
+    return SimResult(
+        ipc=instructions / cycles,
+        l1_latency=float(stats["l1_lat_sum"]) / float(stats["l1_lat_n"]),
+        local_hit_rate=local / requests,
+        remote_hit_rate=remote / requests,
+        l1_hit_rate=(local + remote) / requests,
+        l2_accesses=float(stats["l2_accesses"]),
+        dram_accesses=float(stats["dram"]),
+        noc_flits=float(stats["noc_flits"]),
+        cycles=cycles,
+        instructions=instructions,
+    )

@@ -1,0 +1,107 @@
+"""Functional (JAX) set-associative tag arrays with timestamp LRU.
+
+State is a dict of arrays so it threads through ``lax.scan`` carries:
+
+    tags : (n_arrays, n_sets, n_ways) int32   line address stored per way
+    last : (n_arrays, n_sets, n_ways) int32   last-touch timestamp (LRU)
+    valid: (n_arrays, n_sets, n_ways) bool
+    dirty: (n_arrays, n_sets, n_ways) bool
+
+All operations are batched over a request vector. ``probe_many`` is the
+pure-jnp form of the paper's *aggregated tag array*: one request compared
+against the tag arrays of every cache in its cluster in parallel — the
+same computation `repro.kernels.ata_tag_probe` implements as a Pallas TPU
+kernel (a test asserts they agree).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+TagState = Dict[str, jnp.ndarray]
+
+
+def init_tag_state(n_arrays: int, n_sets: int, n_ways: int) -> TagState:
+    shape = (n_arrays, n_sets, n_ways)
+    return {
+        "tags": jnp.zeros(shape, jnp.int32),
+        "last": jnp.full(shape, -1, jnp.int32),
+        "valid": jnp.zeros(shape, bool),
+        "dirty": jnp.zeros(shape, bool),
+    }
+
+
+def probe(state: TagState, array_idx: jnp.ndarray, set_idx: jnp.ndarray,
+          addr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Look up one (array, set) per request.
+
+    Returns (hit, way, dirty_hit); way is the hit way or the LRU victim.
+    """
+    tags = state["tags"][array_idx, set_idx]      # (R, W)
+    valid = state["valid"][array_idx, set_idx]
+    last = state["last"][array_idx, set_idx]
+    match = (tags == addr[:, None]) & valid
+    hit = match.any(axis=-1)
+    hit_way = jnp.argmax(match, axis=-1)
+    victim = jnp.argmin(jnp.where(valid, last, jnp.iinfo(jnp.int32).min),
+                        axis=-1)
+    way = jnp.where(hit, hit_way, victim)
+    dirty_hit = (match & state["dirty"][array_idx, set_idx]).any(axis=-1)
+    return hit, way, dirty_hit
+
+
+def probe_many(state: TagState, arrays: jnp.ndarray, set_idx: jnp.ndarray,
+               addr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Aggregated-tag-array probe: each request vs a *group* of arrays.
+
+    arrays : (R, G) int32 — the G tag arrays (cluster caches) per request
+    Returns (hits (R, G), ways (R, G), dirty (R, G)).
+    """
+    tags = state["tags"][arrays, set_idx[:, None]]    # (R, G, W)
+    valid = state["valid"][arrays, set_idx[:, None]]
+    match = (tags == addr[:, None, None]) & valid
+    hits = match.any(axis=-1)
+    ways = jnp.argmax(match, axis=-1)
+    dirty = (match & state["dirty"][arrays, set_idx[:, None]]).any(axis=-1)
+    return hits, ways, dirty
+
+
+def touch(state: TagState, array_idx, set_idx, way, now,
+          mask, *, set_dirty=None) -> TagState:
+    """Refresh LRU timestamp (and optionally dirty) for masked requests."""
+    a = jnp.where(mask, array_idx, 0)
+    s = jnp.where(mask, set_idx, 0)
+    w = jnp.where(mask, way, 0)
+    last = state["last"].at[a, s, w].max(jnp.where(mask, now, -1))
+    out = dict(state, last=last)
+    if set_dirty is not None:
+        out["dirty"] = state["dirty"].at[a, s, w].set(
+            jnp.where(mask & set_dirty, True, state["dirty"][a, s, w]))
+    return out
+
+
+def fill(state: TagState, array_idx, set_idx, way, addr, now,
+         mask, *, dirty=None) -> Tuple[TagState, jnp.ndarray]:
+    """Install lines for masked requests; returns (state, evicted_dirty).
+
+    Duplicate (array,set,way) targets resolve last-writer-wins, matching a
+    single-ported fill path. ``evicted_dirty`` flags write-back traffic.
+    """
+    a = jnp.where(mask, array_idx, 0)
+    s = jnp.where(mask, set_idx, 0)
+    w = jnp.where(mask, way, 0)
+    old_valid = state["valid"][a, s, w]
+    old_dirty = state["dirty"][a, s, w]
+    evicted_dirty = mask & old_valid & old_dirty
+
+    tags = state["tags"].at[a, s, w].set(
+        jnp.where(mask, addr, state["tags"][a, s, w]))
+    valid = state["valid"].at[a, s, w].set(
+        jnp.where(mask, True, old_valid))
+    last = state["last"].at[a, s, w].max(jnp.where(mask, now, -1))
+    new_dirty = jnp.where(mask, dirty if dirty is not None else False,
+                          old_dirty)
+    dirty_arr = state["dirty"].at[a, s, w].set(new_dirty)
+    return {"tags": tags, "last": last, "valid": valid,
+            "dirty": dirty_arr}, evicted_dirty

@@ -1,0 +1,57 @@
+"""Deterministic synthetic token pipeline with stateless resume.
+
+Every batch is a pure function of (seed, step, shard) — a restarted or
+re-sharded job regenerates exactly the token stream it would have seen,
+with no iterator state to checkpoint (the "stateless data skipping"
+pattern used at scale). Shards slice the global batch, so elastic
+re-sharding (different host count after a failure) stays bit-identical
+as long as global_batch is unchanged.
+
+The synthetic text is a Zipf-ish Markov stream: enough structure for a
+~100M-param model to show steadily decreasing loss in the e2e example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step]))
+
+
+def make_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Global batch for `step`, sliced to this shard."""
+    rng = _batch_rng(cfg, step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    # zipf-ish unigram pool mixed with short-range repetition structure
+    base = (rng.zipf(1.3, size=(B, S + 1)) - 1) % V
+    rep = np.roll(base, 7, axis=1)
+    mask = rng.random((B, S + 1)) < 0.35
+    toks = np.where(mask, rep, base).astype(np.int32)
+    tokens, labels = toks[:, :-1], toks[:, 1:]
+    shard_sz = B // cfg.n_shards
+    lo = cfg.shard * shard_sz
+    hi = lo + shard_sz
+    return {"tokens": tokens[lo:hi], "labels": labels[lo:hi]}
+
+
+def iterate(cfg: DataConfig, start_step: int = 0
+            ) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, step)
+        step += 1

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical compute:
+
+  ata_tag_probe   — the paper's aggregated tag array (parallel tag compare)
+  flash_attention — blocked online-softmax attention (GQA/causal/window)
+  wkv6            — chunked RWKV6 recurrence with data-dependent decay
+
+Use via ``repro.kernels.ops`` which dispatches pallas / interpret / ref.
+"""
+from repro.kernels import ops, ref  # noqa: F401

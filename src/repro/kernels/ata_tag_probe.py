@@ -1,0 +1,97 @@
+"""Aggregated-tag-array probe as a Pallas TPU kernel.
+
+The paper's hardware structure (Fig. 6): a batch of request address tags
+is compared against the tag arrays of *all* caches in a cluster in
+parallel; per (request, cache) the kernel reports hit and hit-way. On a
+GPU this is SRAM banks + tag selectors + comparator groups; on TPU we
+re-tile it for VMEM/VPU:
+
+  grid (R/BR, C/BC): each program holds BR requests and BC complete tag
+  arrays (BC, S, W) resident in VMEM. The "tag selector" (route each
+  set's tags to the comparators of the requests that selected it)
+  becomes a masked-max one-hot gather over the set axis — data-parallel
+  on 8x128 VPU lanes instead of a mux tree. The "comparator group" is a
+  vectorized equality over (BR, BC, W).
+
+One-hot gather (not jnp.take) keeps the int32 tag path exact and avoids
+dynamic-gather lowering restrictions in Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BR = 128   # requests per program
+DEFAULT_BC = 8     # tag arrays per program
+
+
+def _probe_kernel(set_ref, qtag_ref, tags_ref, valid_ref,
+                  hits_ref, ways_ref):
+    sets = set_ref[...]                      # (BR,) int32
+    qtag = qtag_ref[...]                     # (BR,) int32
+    tags = tags_ref[...]                     # (BC, S, W) int32
+    valid = valid_ref[...]                   # (BC, S, W) int8
+
+    n_sets = tags.shape[1]
+    # tag selector: one-hot over the set axis, masked max (exact in int32)
+    onehot = sets[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (sets.shape[0], n_sets), 1)          # (BR, S)
+    sel = onehot[:, None, :, None]                      # (BR, 1, S, 1)
+    gathered = jnp.max(
+        jnp.where(sel, tags[None], jnp.iinfo(jnp.int32).min),
+        axis=2)                                          # (BR, BC, W)
+    gvalid = jnp.max(jnp.where(sel, valid[None], 0), axis=2) > 0
+
+    # comparator group: all ways of all caches vs each request in parallel
+    match = (gathered == qtag[:, None, None]) & gvalid   # (BR, BC, W)
+    hits_ref[...] = match.any(axis=-1).astype(jnp.int8)
+    ways_ref[...] = jnp.argmax(match, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc", "interpret"))
+def ata_tag_probe(set_idx: jax.Array, qtag: jax.Array, tags: jax.Array,
+                  valid: jax.Array, *, br: int = DEFAULT_BR,
+                  bc: int = DEFAULT_BC, interpret: bool = True):
+    """Probe R request tags against C aggregated tag arrays.
+
+    set_idx : (R,) int32   cache set selected by each request
+    qtag    : (R,) int32   request address tag
+    tags    : (C, S, W) int32 tag arrays of the C caches in the cluster
+    valid   : (C, S, W) bool/int8
+    returns (hits (R, C) bool, ways (R, C) int32)
+
+    ``interpret=True`` runs the kernel body on CPU (validation); on a
+    real TPU pass ``interpret=False``.
+    """
+    R = set_idx.shape[0]
+    C, S, W = tags.shape
+    br = min(br, R)
+    bc = min(bc, C)
+    if R % br or C % bc:
+        raise ValueError(f"R={R} and C={C} must tile by ({br},{bc})")
+    grid = (R // br, C // bc)
+    hits, ways = pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((bc, S, W), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bc, S, W), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, C), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_idx.astype(jnp.int32), qtag.astype(jnp.int32),
+      tags.astype(jnp.int32), valid.astype(jnp.int8))
+    return hits.astype(bool), ways

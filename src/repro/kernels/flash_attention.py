@@ -1,0 +1,126 @@
+"""Blocked (flash) attention Pallas kernel for TPU.
+
+Online-softmax attention tiled for VMEM: grid (B, Hq, Tq/bq, Tk/bk) with
+the KV axis innermost; scratch accumulators (acc, m, l) persist across
+the KV sweep (TPU grids execute sequentially). Supports:
+
+  - GQA: Hq a multiple of Hkv; the K/V BlockSpec index map folds the
+    query head onto its KV head, so KV tiles are fetched once per group.
+  - causal masking with end-aligned positions (prefill and decode),
+  - sliding local window (RecurrentGemma-style local attention),
+  - per-batch KV valid length (decode against a partially filled cache).
+
+Block shapes are (bq, D)/(bk, D) with D = head_dim; bq/bk default 128 to
+align the MXU contraction dims. Fully-masked KV tiles are skipped with
+``pl.when`` (no FLOPs, no NaN-generating -inf rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *, scale, causal, window,
+                 bq, bk, tq, tk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = kvlen_ref[0]
+    q_start = iq * bq + (tk - tq)          # end-aligned global positions
+    k_start = ik * bk
+
+    # ---- block-level visibility (skip fully masked KV tiles) -------------
+    visible = k_start < kv_len
+    if causal:
+        visible &= k_start <= q_start + bq - 1
+    if window is not None:
+        visible &= k_start + bk - 1 > q_start - window
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, kv_len=None, *, causal: bool = True,
+                    window: int | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool = True):
+    """q (B,Hq,Tq,D), k/v (B,Hkv,Tk,D), kv_len (B,) -> (B,Hq,Tq,D)."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError("Hq must be a multiple of Hkv")
+    group = Hq // Hkv
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    if Tq % bq or Tk % bk:
+        raise ValueError(f"Tq={Tq}/Tk={Tk} must tile by ({bq},{bk})")
+    if kv_len is None:
+        kv_len = jnp.full((B,), Tk, jnp.int32)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(
+        _attn_kernel, scale=D ** -0.5, causal=causal, window=window,
+        bq=bq, bk=bk, tq=Tq, tk=Tk)
+    grid = (B, Hq, Tq // bq, Tk // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i, j: (b,)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

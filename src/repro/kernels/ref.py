@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth: simple, unblocked, obviously
+correct. Kernel tests sweep shapes/dtypes and assert allclose vs these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# aggregated tag-array probe (paper Fig. 6)
+# --------------------------------------------------------------------------
+def ata_tag_probe_ref(set_idx, qtag, tags, valid):
+    """set_idx (R,), qtag (R,), tags (C,S,W), valid (C,S,W) -> hits, ways."""
+    sel_tags = tags[:, set_idx, :]              # (C, R, W)
+    sel_valid = valid[:, set_idx, :].astype(bool)
+    match = (sel_tags == qtag[None, :, None]) & sel_valid
+    hits = match.any(axis=-1).T                 # (R, C)
+    ways = jnp.argmax(match, axis=-1).T.astype(jnp.int32)
+    return hits, ways
+
+
+# --------------------------------------------------------------------------
+# blocked causal / local attention with GQA
+# --------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """q (B, Hq, Tq, D), k/v (B, Hkv, Tk, D) -> (B, Hq, Tq, D).
+
+    Hq must be a multiple of Hkv (GQA). ``window`` = sliding local window
+    size (tokens attend to the last ``window`` positions, inclusive).
+    For decode, pass Tq=1 with full-length k/v (causal=False + explicit
+    lengths handled by the caller's mask).
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = (scale if scale is not None else D ** -0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * s
+    Tk = k.shape[2]
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)      # align ends
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    out = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(logits, axis=-1), vv)
+    return out.astype(q.dtype)
+
+
+def attention_len_ref(q, k, v, kv_len, *, causal=False, window=None,
+                      scale=None):
+    """attention_ref with a per-batch valid KV length (decode path)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = (scale if scale is not None else D ** -0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * s
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.broadcast_to(kpos < kv_len[:, None, None, None],
+                            (B, 1, Tq, Tk))
+    if causal:
+        mask &= (kpos <= qpos)[None, None]
+    if window is not None:
+        mask &= (kpos > qpos - window)[None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) recurrence with data-dependent decay
+# --------------------------------------------------------------------------
+def wkv6_ref(r, k, v, w, u, *, initial_state=None):
+    """Sequential oracle for the WKV6 recurrence.
+
+    r,k,w : (B, H, T, K); v : (B, H, T, V); u : (H, K)
+    w is the per-step *log* decay (<= 0); decay factor = exp(w).
+    S_t = diag(exp(w_t)) S_{t-1} + k_t^T v_t
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    Returns (o (B,H,T,V), final_state (B,H,K,V)).
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    S0 = (jnp.zeros((B, H, K, V), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,K),(B,H,K),(B,H,V)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, ot
+
+    xs = (r.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), w.transpose(2, 0, 1, 3))
+    S, o = jax.lax.scan(step, S0, xs)
+    return o.transpose(1, 2, 0, 3), S

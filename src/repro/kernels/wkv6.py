@@ -1,0 +1,118 @@
+"""RWKV6 (Finch) WKV recurrence as a chunked Pallas TPU kernel.
+
+The per-token recurrence (data-dependent diagonal decay)
+
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+is O(T) sequential. The kernel processes chunks of L tokens: the grid is
+(B, H, T/L) with the chunk axis innermost; the (K, V) state lives in a
+VMEM scratch that persists across the sequential chunk sweep. Per chunk
+(c = cumulative log-decay, c_prev = c shifted):
+
+    inter:  o  += (r * exp(c_prev)) @ S                (MXU, L x K x V)
+    intra:  A[t,s] = sum_k r[t,k] k[s,k] e^{c_prev[t,k]-c[s,k]}, s < t
+            o  += A @ v                                 (MXU)
+    bonus:  o_t += (r_t . u . k_t) v_t
+    state:  S'  = exp(c_L) * S + (k * exp(c_L - c))^T @ v
+
+All exponents are masked *before* exponentiation so every exp argument
+is <= 0 — numerically stable for arbitrarily strong decay, with no
+renormalization pass. The (L, L, K) intra tensor bounds VMEM: with
+L = K = 64 it is 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _wkv6_kernel(u_ref, s0_ref, r_ref, k_ref, v_ref, w_ref,
+                 o_ref, sf_ref, s_scr, *, chunk):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    L = chunk
+    r = r_ref[0, 0].astype(jnp.float32)          # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)          # (L, V)
+    w = w_ref[0, 0].astype(jnp.float32)          # (L, K), log decay <= 0
+    u = u_ref[0].astype(jnp.float32)             # (K,)
+
+    c = jnp.cumsum(w, axis=0)                    # c_t   (inclusive)
+    c_prev = c - w                               # c_{t-1}
+    S = s_scr[...]                               # (K, V)
+
+    o = jax.lax.dot(r * jnp.exp(c_prev), S)      # inter-chunk  (L, V)
+
+    # intra-chunk: strict-lower-triangular attention-like term
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    mask = (t_idx > s_idx)[:, :, None]           # (L, L, 1)
+    expo = jnp.where(mask, c_prev[:, None, :] - c[None, :, :], NEG_INF)
+    A = (r[:, None, :] * k[None, :, :] * jnp.exp(expo)).sum(-1)  # (L, L)
+    o = o + jax.lax.dot(A, v)
+
+    bonus = (r * u[None, :] * k).sum(-1, keepdims=True)          # (L, 1)
+    o = o + bonus * v
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    c_last = c[-1]                               # (K,)
+    S_new = (jnp.exp(c_last)[:, None] * S
+             + jax.lax.dot((k * jnp.exp(c_last[None, :] - c)).T, v))
+    s_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0] = S_new.astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, initial_state=None, *, chunk: int = 64,
+         interpret: bool = True):
+    """Chunked WKV6. r,k,w (B,H,T,K); v (B,H,T,V); u (H,K).
+
+    Returns (o (B,H,T,V) in r.dtype, final_state (B,H,K,V) f32).
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+    grid = (B, H, T // chunk)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    o, sf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda b, h, i: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(u, initial_state, r, k, v, w)
+    return o, sf

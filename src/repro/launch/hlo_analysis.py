@@ -1,0 +1,266 @@
+"""Post-optimization HLO text analysis for the roofline terms.
+
+XLA's ``cost_analysis()`` counts a ``while`` body once, so scanned-layer
+models under-report by ~n_layers. This parser rebuilds honest whole-
+program counts from the compiled HLO text:
+
+  * builds the computation call graph (while bodies via
+    ``backend_config known_trip_count``, fusions/calls via ``calls=``),
+  * assigns every computation a trip multiplier,
+  * sums dot FLOPs (2 * prod(out) * prod(contracted lhs dims)) and
+    collective payload bytes (per-device shard shapes, since SPMD HLO is
+    the per-device program) with those multipliers.
+
+Collective byte conventions (ring algorithms, per device):
+  all-reduce 2x input, all-gather 1x output, reduce-scatter 1x input,
+  all-to-all 1x input, collective-permute 1x input.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_TYPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|s32|u32|s64|u64|f8e4m3fn|f8e5m2|f16|bf16|f32|f64"
+    r"|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class HloProgram:
+    def __init__(self, text: str):
+        self.ops: Dict[str, dict] = {}
+        self.comp_of: Dict[str, str] = {}
+        self.comps: List[str] = []
+        self._parse(text)
+        self.mult = self._multipliers()
+
+    def _parse(self, text: str):
+        comp = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            # computation headers: "%name (params) -> type {" / "ENTRY ..."
+            if (stripped.endswith("{") and "->" in stripped
+                    and " = " not in stripped.split("->")[0]):
+                mc = _COMP_RE.match(stripped)
+                if mc:
+                    comp = mc.group(1)
+                    self.comps.append(comp)
+                    continue
+            mo = _OP_RE.match(line)
+            if mo and comp is not None:
+                name, out_type, opcode = mo.groups()
+                self.ops[name] = {
+                    "type": out_type, "opcode": opcode,
+                    "line": line, "comp": comp,
+                }
+                self.comp_of[name] = comp
+
+    def _multipliers(self) -> Dict[str, float]:
+        # edges comp -> (callee, factor)
+        edges = defaultdict(list)
+        for name, op in self.ops.items():
+            line = op["line"]
+            if op["opcode"] == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mt = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+                trip = int(mt.group(1)) if mt else 1
+                if mb:
+                    edges[op["comp"]].append((mb.group(1), trip))
+                mcond = re.search(r"condition=%?([\w.\-]+)", line)
+                if mcond:
+                    edges[op["comp"]].append((mcond.group(1), trip))
+            else:
+                for callee in re.findall(r"calls=%?([\w.\-]+)", line):
+                    edges[op["comp"]].append((callee, 1))
+                mto = re.search(r"to_apply=%?([\w.\-]+)", line)
+                if mto:
+                    edges[op["comp"]].append((mto.group(1), 1))
+
+        mult: Dict[str, float] = defaultdict(float)
+        entry = self.comps[-1] if self.comps else None
+        # ENTRY is the computation not called by anyone
+        called = {c for lst in edges.values() for c, _ in lst}
+        roots = [c for c in self.comps if c not in called] or [entry]
+        for r in roots:
+            mult[r] = 1.0
+        # propagate (call graph is a DAG; iterate to fixed point)
+        for _ in range(64):
+            changed = False
+            for parent, lst in edges.items():
+                if mult[parent] <= 0:
+                    continue
+                for callee, factor in lst:
+                    want = mult[parent] * factor
+                    if mult[callee] < want:
+                        mult[callee] = want
+                        changed = True
+            if not changed:
+                break
+        return dict(mult)
+
+    # -- effective-dtype resolution ------------------------------------------
+    def _source_type(self, name: str, depth: int = 4) -> str:
+        """Follow converts / convert-wrapper fusions / copies to the
+        source tensor's type: XLA-CPU upcasts every bf16 dot to f32 via
+        convert pairs, and int8 KV caches are dequantized before use —
+        counting the *source* dtype gives TPU-faithful byte counts."""
+        op = self.ops.get(name)
+        if op is None or depth == 0:
+            return ""
+        opc = op["opcode"]
+        passthrough = opc in ("convert", "copy", "bitcast", "transpose",
+                              "reshape", "broadcast")
+        if opc == "fusion" and ("convert" in name or "copy" in name):
+            passthrough = True
+        if passthrough:
+            m = re.search(rf"{opc}\(([^)]*)\)", op["line"])
+            if m:
+                first = m.group(1).split(",")[0].strip().lstrip("%")
+                src = self._source_type(first, depth - 1)
+                if src:
+                    return src
+        return op["type"]
+
+    def _operand_bytes(self, arg: str) -> int:
+        src = self.ops.get(arg)
+        if src is None:
+            return 0
+        t = self._source_type(arg)
+        own = _shape_dims(src["type"])
+        src_dims = _shape_dims(t)
+        # same element count -> use source dtype; else keep own type
+        n_own = 1
+        for d in own:
+            n_own *= d
+        n_src = 1
+        for d in src_dims:
+            n_src *= d
+        if n_own == n_src and t:
+            per = _shape_bytes(t) / max(n_src, 1)
+            return int(n_own * per)
+        return _shape_bytes(src["type"])
+
+    # -- public ------------------------------------------------------------
+    def dot_flops(self) -> float:
+        total = 0.0
+        for name, op in self.ops.items():
+            if op["opcode"] != "dot":
+                continue
+            line = op["line"]
+            out_dims = _shape_dims(op["type"])
+            margs = re.search(r"dot\(([^)]*)\)", line)
+            if not margs:
+                continue
+            args = [a.strip().lstrip("%") for a in margs.group(1).split(",")]
+            lhs = self.ops.get(args[0])
+            if lhs is None:
+                continue
+            lhs_dims = _shape_dims(lhs["type"])
+            mcd = re.search(r"lhs_contracting_dims={([0-9,]*)}", line)
+            contract = 1
+            if mcd and mcd.group(1):
+                for d in mcd.group(1).split(","):
+                    contract *= lhs_dims[int(d)]
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            total += 2.0 * out_n * contract \
+                * self.mult.get(op["comp"], 1.0)
+        return total
+
+    def dot_bytes(self) -> float:
+        """Operand+output bytes over dot ops (DRAM-traffic proxy),
+        operand dtypes resolved through converts (see above)."""
+        total = 0.0
+        for name, op in self.ops.items():
+            if op["opcode"] != "dot":
+                continue
+            m = self.mult.get(op["comp"], 1.0)
+            margs = re.search(r"dot\(([^)]*)\)", op["line"])
+            opb = raw = 0
+            if margs:
+                for a in margs.group(1).split(","):
+                    a = a.strip().lstrip("%")
+                    opb += self._operand_bytes(a)
+                    if a in self.ops:
+                        raw += _shape_bytes(self.ops[a]["type"])
+            outb = _shape_bytes(op["type"])
+            if opb and opb < raw and "f32[" in op["type"]:
+                outb //= 2   # upcast operands: TPU writes the narrow type
+            total += (opb + outb) * m
+        return total
+
+    def collective_bytes(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for name, op in self.ops.items():
+            kind = op["opcode"].replace("-start", "")
+            if kind not in COLLECTIVES:
+                continue
+            m = self.mult.get(op["comp"], 1.0)
+            out_b = _shape_bytes(op["type"])
+            in_b = in_raw = 0
+            margs = re.search(rf"{op['opcode']}\(([^)]*)\)", op["line"])
+            if margs:
+                for a in margs.group(1).split(","):
+                    a = a.strip().lstrip("%")
+                    in_b += self._operand_bytes(a)
+                    if a in self.ops:
+                        in_raw += _shape_bytes(self.ops[a]["type"])
+            if in_b and in_b < in_raw:
+                # operands were CPU-upcast f32: the TPU wire payload is
+                # the narrow source type on the output side too
+                out_b = int(out_b * in_b / max(in_raw, 1))
+            if kind == "all-reduce":
+                bytes_ = 2 * in_b
+            elif kind == "all-gather":
+                bytes_ = out_b
+            else:
+                bytes_ = in_b if in_b else out_b
+            out[kind] += bytes_ * m
+        return dict(out)
+
+    def summary(self) -> dict:
+        coll = self.collective_bytes()
+        return {
+            "dot_flops": self.dot_flops(),
+            "dot_bytes": self.dot_bytes(),
+            "collective_bytes": coll,
+            "collective_total": sum(coll.values()),
+            "n_computations": len(self.comps),
+            "n_ops": len(self.ops),
+        }
+
+
+def analyze_text(text: str) -> dict:
+    return HloProgram(text).summary()

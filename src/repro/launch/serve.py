@@ -1,0 +1,121 @@
+"""Batched serving driver with the ATA prefix cache.
+
+Per request batch: probe the replicated ATA block directory for the
+longest shared-prefix reuse (zero probe traffic), prefill only the
+uncached suffix, seal new KV blocks into the *local* shard's pool, and
+run batched decode steps. `examples/serve_ata.py` exercises this with a
+smoke model + measurable prefix-reuse savings vs the baselines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --requests 32 --decode-steps 16 --policy ata
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.serving.ata_cache import (AtaCacheConfig, AtaPrefixCache,
+                                     hash_blocks, synth_requests)
+
+
+class ModelServer:
+    """One logical serving shard holding real model KV block payloads."""
+
+    def __init__(self, cfg, params, ata: AtaPrefixCache, shard: int,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ata = ata
+        self.shard = shard
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t: T.forward(p, cfg, t))
+        self._decode = jax.jit(
+            lambda p, t, c: T.decode_step(p, cfg, t, c))
+
+    def _prefill_cache(self, tokens: np.ndarray) -> Dict:
+        """Build a decode cache by teacher-forcing tokens one at a time
+        (exercises decode path; payloads become reusable blocks)."""
+        B = 1
+        cache = T.init_cache(self.cfg, B, self.max_len)
+        for t in tokens:
+            _, cache = self._decode(self.params,
+                                    jnp.asarray([[t]], jnp.int32), cache)
+        return cache
+
+    def serve(self, tokens: np.ndarray, decode_steps: int
+              ) -> Tuple[List[int], Dict[str, float]]:
+        t0 = time.time()
+        block = self.ata.cfg.block_tokens
+        n_blocks = len(tokens) // block
+        reused, payloads = self.ata.lookup_prefix(self.shard, tokens)
+        # payloads hold (cache pytree snapshot) at each block boundary;
+        # resume from the deepest one and recompute only the suffix.
+        if reused and isinstance(payloads[-1], dict):
+            cache = jax.tree.map(jnp.copy, payloads[-1])
+            suffix = tokens[reused * block:]
+        else:
+            cache = T.init_cache(self.cfg, 1, self.max_len)
+            suffix = tokens
+            reused = 0
+        for i, t in enumerate(suffix):
+            _, cache = self._decode(self.params,
+                                    jnp.asarray([[t]], jnp.int32), cache)
+            # seal a block snapshot at block boundaries (local write rule)
+            pos = reused * block + i + 1
+            if pos % block == 0:
+                h = int(hash_blocks(tokens[:pos], block)[-1])
+                self.ata.pool_payload[self.shard][h] = jax.tree.map(
+                    jnp.copy, cache)
+        out = []
+        last = jnp.asarray([[int(tokens[-1])]], jnp.int32)
+        for _ in range(decode_steps):
+            logits, cache = self._decode(self.params, last, cache)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            out.append(nxt)
+            last = jnp.asarray([[nxt]], jnp.int32)
+        return out, {"reused_blocks": reused,
+                     "prefill_tokens": len(suffix),
+                     "latency_s": time.time() - t0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--policy", default="ata")
+    ap.add_argument("--shards", type=int, default=4)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    acfg = AtaCacheConfig(n_shards=args.shards, block_tokens=16)
+    ata = AtaPrefixCache(acfg, args.policy)
+    servers = [ModelServer(cfg, params, ata, s) for s in range(args.shards)]
+    reqs = synth_requests(args.requests, n_shards=args.shards,
+                          vocab=cfg.vocab_size, shared_frac=0.7)
+    tot_prefill = 0
+    tot_reused = 0
+    for shard, toks in reqs:
+        _, m = servers[int(shard)].serve(np.asarray(toks),
+                                         args.decode_steps)
+        tot_prefill += m["prefill_tokens"]
+        tot_reused += m["reused_blocks"] * acfg.block_tokens
+    st = ata.stats
+    print(f"[serve:{args.policy}] requests={args.requests} "
+          f"prefill_tokens={tot_prefill} reused_tokens={tot_reused} "
+          f"hit_rate={st.hit_rate:.3f} local={st.local_hits} "
+          f"remote={st.remote_hits} probes={st.probe_messages}")
+
+
+if __name__ == "__main__":
+    main()

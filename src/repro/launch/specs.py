@@ -1,0 +1,136 @@
+"""Abstract input specs + shardings for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+no allocation); ``*_shardings`` map them (and the train/serve state
+pytrees) onto the mesh through the per-arch logical rules.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.sharding.rules import Rules, logical_to_spec, make_rules
+
+
+def tune_for_mesh(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    """Set kv_repeat so expanded KV heads divide the model axis."""
+    import dataclasses
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and cfg.n_heads % msize == 0:
+        r = math.lcm(cfg.n_kv_heads, msize) // cfg.n_kv_heads
+        if r * cfg.n_kv_heads <= cfg.n_heads:
+            return dataclasses.replace(cfg, kv_repeat=r)
+    return cfg
+
+
+def split_lens(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(encoder_len, decoder_len): enc-dec archs split the token budget."""
+    if cfg.is_enc_dec:
+        return seq_len // 2, seq_len // 2
+    return 0, seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                abstract_params=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's data inputs."""
+    B = shape.global_batch
+    enc_len, dec_len = split_lens(cfg, shape.seq_len)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, dec_len), i32),
+               "labels": jax.ShapeDtypeStruct((B, dec_len), i32)}
+        if cfg.is_enc_dec:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, dec_len), i32)}
+        if cfg.is_enc_dec:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda p: T.init_cache(cfg, B, dec_len, start_len=dec_len - 1,
+                                   params=p,
+                                   **({"enc_frames": jnp.zeros(
+                                       (B, enc_len, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))}
+                                      if cfg.is_enc_dec else {})),
+            abstract_params)
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "cache": cache}
+    raise ValueError(shape.kind)
+
+
+#: cache-leaf path -> logical axes (leading stacked dim handled in code)
+_CACHE_PATTERNS = (
+    (r".*/(k|v|k_scale|v_scale)$",
+     ("batch", "cache_kv_heads", "cache_seq", "head_dim")),
+    (r".*/len$", ("batch",)),
+    (r".*/wkv$", ("batch", "rheads", "rkey", "rvalue")),
+    (r".*/shift$", ("batch", "embed")),
+    (r".*/conv$", ("batch", None, "rnn")),
+    (r".*/h$", ("batch", "rnn")),
+)
+
+
+def _tree_pspecs(tree, patterns, rules: Rules):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat[0]:
+        spath = "/".join(p.key if hasattr(p, "key") else str(p.idx)
+                         for p in path)
+        for pat, axes in patterns:
+            if re.match(pat, spath):
+                if len(axes) + 1 == leaf.ndim:
+                    axes = (None,) + axes
+                elif len(axes) != leaf.ndim:
+                    raise ValueError(f"{spath}: rank {leaf.ndim} vs {axes}")
+                out.append(logical_to_spec(axes, rules))
+                break
+        else:
+            raise ValueError(f"no cache axis rule for {spath}")
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, rules: Rules):
+    specs = _tree_pspecs(cache_tree, _CACHE_PATTERNS, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_shardings(batch_tree, mesh: Mesh, rules: Rules):
+    spec = logical_to_spec(("batch",), rules)
+    def shard(leaf):
+        extra = (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*(tuple(spec) + extra)))
+    return jax.tree.map(shard, batch_tree)
+
+
+def abstract_train_state(cfg: ModelConfig):
+    from repro.train.step import init_train_state
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def train_state_shardings(state_shape, cfg: ModelConfig, mesh: Mesh,
+                          rules: Rules):
+    from repro.sharding.rules import param_shardings
+    from repro.optim.adamw import zero1_shardings
+    psh = param_shardings(state_shape["params"], mesh, rules)
+    osh = zero1_shardings(psh, mesh, state_shape["params"])
+    return {"params": psh, "opt": osh}

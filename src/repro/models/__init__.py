@@ -1,0 +1,5 @@
+"""Pure-functional JAX model zoo for the ten assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models import transformer
+
+__all__ = ["ModelConfig", "transformer"]

@@ -1,0 +1,265 @@
+"""GQA attention: init, prefill/train forward, decode step, KV cache.
+
+Implementations:
+  - "blocked": pure-JAX online-softmax over (q-chunk, kv-chunk) tiles —
+    O(chunk * T) memory, compiles on any backend; q-chunks are remat'd so
+    the backward pass recomputes tile logits (flash-style). Default for
+    training / long prefill.
+  - "ref": plain einsum (small shapes, oracles).
+  - "interpret"/"pallas": the Pallas flash kernel (TPU target).
+
+GQA KV heads are *virtually expanded* by ``cfg.kv_repeat`` before use
+(and before cache writes) so the head axis matches the mesh "model"
+degree — the MaxText-style trade of cache memory for shardability.
+Decode with non-head-sharded archs instead shards the cache sequence
+axis (flash-decoding style); both are expressed purely through logical
+axis annotations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import annotate
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, (H, hd), bias=cfg.qkv_bias, dtype=dt),
+        "wk": layers.dense_init(ks[1], d, (KV, hd), bias=cfg.qkv_bias, dtype=dt),
+        "wv": layers.dense_init(ks[2], d, (KV, hd), bias=cfg.qkv_bias, dtype=dt),
+        "wo": {"kernel": layers.truncated_normal(
+            ks[3], (H, hd, d), dt, (H * hd) ** -0.5)},
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = layers.rmsnorm_init(hd, dt)
+        p["k_norm"] = layers.rmsnorm_init(hd, dt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None, *, positions=None,
+                 rope_on: bool = True, kv_repeat: int = 1):
+    kv_x = x if kv_x is None else kv_x
+    q = layers.dense(p["wq"], x)                      # (B,T,H,hd)
+    k = layers.dense(p["wk"], kv_x)                   # (B,Tk,KV,hd)
+    v = layers.dense(p["wv"], kv_x)
+    if "q_norm" in p:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope_on and positions is not None:
+        q = layers.rope(q, positions, cfg.rope_theta)
+        kpos = positions if k.shape[1] == q.shape[1] else jnp.arange(k.shape[1])
+        k = layers.rope(k, kpos, cfg.rope_theta)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    q = annotate(q, "batch", "seq", "heads", "head_dim")
+    k = annotate(k, "batch", "seq", "kv_heads_act", "head_dim")
+    v = annotate(v, "batch", "seq", "kv_heads_act", "head_dim")
+    return q, k, v
+
+
+def blocked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                      chunk: int, kv_len=None):
+    """Online-softmax tiled attention, (B,H,T,D) layout, any backend."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = D ** -0.5
+
+    def best_chunk(T, c):
+        c = min(c, T)
+        while T % c:
+            c -= 1
+        return c
+
+    cq = best_chunk(Tq, chunk)
+    ck = best_chunk(Tk, chunk)
+    nq, nk = Tq // cq, Tk // ck
+    offset = Tk - Tq                     # end-aligned positions
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, 2) * scale
+        qpos = qi * cq + jnp.arange(cq)[:, None] + offset
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, 2)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, 2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            kpos = ki * ck + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            if kv_len is not None:
+                mask = mask[None] & (kpos[None] < kv_len[:, None, None])
+                mask = mask[:, None]
+            else:
+                mask = mask[None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            pexp = jnp.exp(s - m_new)
+            pexp = jnp.where(mask, pexp, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + pexp.sum(-1, keepdims=True)
+            acc = acc * corr + jnp.einsum(
+                "bhqk,bhkd->bhqd", pexp.astype(v.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hq, cq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hq, cq, 1), jnp.float32),
+                jnp.zeros((B, Hq, cq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return (acc / jnp.where(l == 0.0, 1.0, l)).astype(q.dtype)
+
+    if nq == 1:
+        return q_chunk(0)
+    out = jax.lax.map(q_chunk, jnp.arange(nq))       # (nq,B,H,cq,D)
+    return jnp.moveaxis(out, 0, 2).reshape(B, Hq, Tq, D)
+
+
+def attention_forward(p, cfg: ModelConfig, x, *, positions,
+                      kv_x=None, causal=True, window=None,
+                      rope_on=True, kv_repeat: int = 1):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = _project_qkv(p, cfg, x, kv_x, positions=positions,
+                           rope_on=rope_on, kv_repeat=kv_repeat)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    impl = cfg.attention_impl
+    if impl == "blocked":
+        o = blocked_attention(qt, kt, vt, causal=causal, window=window,
+                              chunk=cfg.attn_chunk)
+    else:
+        o = ops.attention(qt, kt, vt, causal=causal, window=window,
+                          impl=impl)
+    o = o.transpose(0, 2, 1, 3)
+    o = annotate(o, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bthd,hdm->btm", o, p["wo"]["kernel"].astype(o.dtype))
+    if "bias" in p["wo"]:
+        y = y + p["wo"]["bias"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  kv_repeat: int = 1, dtype=jnp.bfloat16) -> Dict:
+    """KV cache; cfg.kv_cache_dtype == "int8" stores scale-quantized
+    int8 payloads with per-(pos, head) f32 scales (1/128 overhead) —
+    halves decode's dominant HBM-streaming term vs bf16."""
+    kvh = cfg.n_kv_heads * kv_repeat
+    shape = (batch, kvh, max_len, cfg.head_dim)
+    axes = ("batch", "cache_kv_heads", "cache_seq", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        cache = {
+            "k": annotate(jnp.zeros(shape, jnp.int8), *axes),
+            "v": annotate(jnp.zeros(shape, jnp.int8), *axes),
+            "k_scale": annotate(
+                jnp.zeros(shape[:-1] + (1,), jnp.float32), *axes),
+            "v_scale": annotate(
+                jnp.zeros(shape[:-1] + (1,), jnp.float32), *axes),
+        }
+    else:
+        cache = {
+            "k": annotate(jnp.zeros(shape, dtype), *axes),
+            "v": annotate(jnp.zeros(shape, dtype), *axes),
+        }
+    cache["len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def _quantize(x, axis=-1):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache: Dict, *,
+                     window=None, kv_repeat: int = 1
+                     ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: x (B, 1, d), cache from init_kv_cache.
+
+    When the cache is smaller than the logical sequence (local-attention
+    ring buffer, size == window), writes wrap modulo the cache length —
+    the ring then always holds exactly the attention window, and no
+    window mask is needed (rope was applied at write time).
+    """
+    S = cache["k"].shape[2]
+    ring = window is not None and S <= window
+    pos = cache["len"][:, None]                       # (B,1) logical pos
+    q, k, v = _project_qkv(p, cfg, x, positions=pos, kv_repeat=kv_repeat)
+    write_pos = cache["len"] % S if ring else cache["len"]
+    sel = (jnp.arange(S)[None, :] == write_pos[:, None])   # (B,S) bool
+    sel4 = sel[:, None, :, None]
+    knew = k.transpose(0, 2, 1, 3)                    # (B,KV,1,hd)
+    vnew = v.transpose(0, 2, 1, 3)
+    axes = ("batch", "cache_kv_heads", "cache_seq", "head_dim")
+    quantized = "k_scale" in cache
+    new_cache: Dict = {}
+    if quantized:
+        kq, ks = _quantize(knew)
+        vq, vs = _quantize(vnew)
+        ck = jnp.where(sel4, kq, cache["k"])
+        cv = jnp.where(sel4, vq, cache["v"])
+        cks = jnp.where(sel[:, None, :, None], ks, cache["k_scale"])
+        cvs = jnp.where(sel[:, None, :, None], vs, cache["v_scale"])
+        new_cache["k_scale"] = annotate(cks, *axes)
+        new_cache["v_scale"] = annotate(cvs, *axes)
+        kk_full = ck.astype(jnp.float32) * cks
+        vv_full = cv.astype(jnp.float32) * cvs
+    else:
+        ck = jnp.where(sel4, knew.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(sel4, vnew.astype(cache["v"].dtype), cache["v"])
+        kk_full, vv_full = ck, cv
+    ck = annotate(ck, *axes)
+    cv = annotate(cv, *axes)
+    new_cache["k"] = ck
+    new_cache["v"] = cv
+    new_len = cache["len"] + 1
+    valid = jnp.minimum(new_len, S) if ring else new_len
+
+    qt = q.transpose(0, 2, 1, 3)                      # (B,H,1,hd)
+    Hq, Hkv = qt.shape[1], ck.shape[1]
+    group = Hq // Hkv
+    kk = (jnp.repeat(kk_full, group, axis=1) if group > 1 else kk_full)
+    vv = (jnp.repeat(vv_full, group, axis=1) if group > 1 else vv_full)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qt.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    kpos = jnp.arange(S)[None, None, None, :]
+    mask = kpos < valid[:, None, None, None]
+    if window is not None and not ring:
+        mask &= kpos > (new_len[:, None, None, None] - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pr.astype(vv.dtype), vv)
+    o = o.transpose(0, 2, 1, 3).astype(x.dtype)        # (B,1,H,hd)
+    y = jnp.einsum("bthd,hdm->btm", o, p["wo"]["kernel"].astype(o.dtype))
+    if "bias" in p["wo"]:
+        y = y + p["wo"]["bias"].astype(y.dtype)
+    new_cache["len"] = new_len
+    return y, new_cache

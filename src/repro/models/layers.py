@@ -1,0 +1,96 @@
+"""Primitive layers: norms, dense, RoPE, activations (pure functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, dtype, stddev):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32).astype(dtype)
+
+
+def dense_init(key, in_dim, out_shape, *, bias=False, dtype=jnp.float32,
+               stddev=None):
+    """Kernel (in_dim, *out_shape) with fan-in init."""
+    out_shape = (out_shape,) if isinstance(out_shape, int) else tuple(out_shape)
+    stddev = stddev if stddev is not None else in_dim ** -0.5
+    p = {"kernel": truncated_normal(key, (in_dim,) + out_shape, dtype, stddev)}
+    if bias:
+        p["bias"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def dense(p, x, *, out_ndim=1):
+    """x (..., in) @ kernel (in, *out) -> (..., *out)."""
+    y = jax.lax.dot_general(
+        x, p["kernel"].astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())))
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def groupnorm(scale, bias, x, n_groups, eps=1e-5):
+    """x (..., n_groups*gdim) normalized per group (RWKV6 head-wise LN)."""
+    shape = x.shape
+    xg = x.reshape(shape[:-1] + (n_groups, shape[-1] // n_groups))
+    x32 = xg.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    y = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def activation(name: str, x, gate=None):
+    if name == "silu_glu":
+        return jax.nn.silu(gate) * x
+    if name == "gelu_glu":
+        return jax.nn.gelu(gate) * x
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta=10000.0):
+    """x (B, T, H, D), positions (B, T) or (T,) -> rotated x."""
+    B, T, H, D = x.shape
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

@@ -1,0 +1,189 @@
+"""Recurrent blocks: RWKV6 (Finch) time-mix and RG-LRU (RecurrentGemma).
+
+Both decode in O(1) state — these are the two archs that run the
+long_500k shape. Sharding: the WKV state (B, H, K, V) and the RG-LRU
+channel state (B, rnn) are channel-independent recurrences, so the V /
+rnn axes ride "model" with zero recurrence-time collectives; only the
+out-projections all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import annotate
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix
+# ---------------------------------------------------------------------------
+def rwkv6_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    r_lora = cfg.rwkv_lora_rank
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    p = {
+        "w_r": layers.dense_init(ks[0], d, d, dtype=dt),
+        "w_k": layers.dense_init(ks[1], d, d, dtype=dt),
+        "w_v": layers.dense_init(ks[2], d, d, dtype=dt),
+        "w_g": layers.dense_init(ks[3], d, d, dtype=dt),
+        "w_w": layers.dense_init(ks[4], d, d, dtype=dt, stddev=1e-3),
+        "w_out": layers.dense_init(ks[5], d, d, dtype=dt),
+        "lora_a": layers.truncated_normal(ks[6], (d, r_lora), dt, d ** -0.5),
+        "lora_b": layers.truncated_normal(ks[7], (r_lora, d), dt, 1e-3),
+        "u": layers.truncated_normal(ks[8], (H, K), dt, 0.5),
+        # static token-shift mix coefficients for r,k,v,w,g
+        "mix_r": jnp.full((d,), 0.5, dt), "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt), "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "w_base": jnp.full((d,), -1.5, dt),   # softplus-ish base log decay
+        "ln_scale": jnp.ones((d,), dt), "ln_bias": jnp.zeros((d,), dt),
+    }
+    return {"rwkv": p}
+
+
+def _rwkv_mix(p, x, x_prev):
+    """Token shift: per-channel lerp between x_{t-1} and x_t."""
+    xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1) - x
+    mixed = {}
+    for name in ("r", "k", "v", "w", "g"):
+        mixed[name] = x + xx * p[f"mix_{name}"].astype(x.dtype)
+    return mixed, x[:, -1]
+
+
+def _rwkv_rkvwg(p, cfg: ModelConfig, mixed):
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    B, T = mixed["r"].shape[:2]
+
+    def heads(t):
+        return t.reshape(B, T, H, K).transpose(0, 2, 1, 3)   # (B,H,T,K)
+
+    r = heads(layers.dense(p["w_r"], mixed["r"]))
+    k = heads(layers.dense(p["w_k"], mixed["k"]))
+    v = heads(layers.dense(p["w_v"], mixed["v"]))
+    g = layers.dense(p["w_g"], mixed["g"])                   # (B,T,d)
+    # data-dependent log decay (LoRA): w = -softplus(base + lora) - eps
+    ww = (layers.dense({"kernel": p["lora_a"]}, jnp.tanh(mixed["w"]))
+          @ p["lora_b"].astype(mixed["w"].dtype))
+    w = -jax.nn.softplus(
+        (p["w_base"].astype(jnp.float32) + layers.dense(
+            p["w_w"], mixed["w"]).astype(jnp.float32) + ww.astype(jnp.float32))
+    ) - 1e-3
+    w = heads(w.astype(jnp.float32))
+    return r, k, v, w, g
+
+
+def rwkv6_forward(p, cfg: ModelConfig, x, state=None
+                  ) -> Tuple[jax.Array, Dict]:
+    """x (B,T,d); state {"shift": (B,d), "wkv": (B,H,K,K)} or None."""
+    p = p["rwkv"]
+    B, T, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    if state is None:
+        state = {"shift": jnp.zeros((B, d), x.dtype),
+                 "wkv": jnp.zeros((B, H, K, K), jnp.float32)}
+    mixed, new_shift = _rwkv_mix(p, x, state["shift"])
+    r, k, v, w, g = _rwkv_rkvwg(p, cfg, mixed)
+    u = p["u"].astype(jnp.float32)
+    impl = "ref" if cfg.attention_impl in ("ref", "blocked") else cfg.attention_impl
+    r = annotate(r, "batch", "rheads", "seq", "rkey")
+    v = annotate(v, "batch", "rheads", "seq", "rvalue")
+    o, wkv = ops.wkv6(r, k, v, w, u, initial_state=state["wkv"], impl=impl,
+                      **({"chunk": cfg.wkv_chunk} if impl != "ref" else {}))
+    o = annotate(o, "batch", "rheads", "seq", "rvalue")
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d)             # (B,T,d)
+    o = layers.groupnorm(p["ln_scale"].astype(jnp.float32),
+                         p["ln_bias"].astype(jnp.float32), o, H)
+    o = o.astype(x.dtype) * jax.nn.silu(g)
+    y = layers.dense(p["w_out"], o)
+    return y.astype(x.dtype), {"shift": new_shift, "wkv": wkv}
+
+
+def rwkv6_decode(p, cfg: ModelConfig, x, state) -> Tuple[jax.Array, Dict]:
+    """Single-token step, reusing the T=1 forward (O(1) state)."""
+    return rwkv6_forward(p, cfg, x, state)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+def rglru_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_x": layers.dense_init(ks[0], d, d, dtype=dt),
+        "w_gate": layers.dense_init(ks[1], d, d, dtype=dt),
+        "w_out": layers.dense_init(ks[2], d, d, dtype=dt),
+        "conv_w": layers.truncated_normal(ks[3], (cfg.conv_width, d), dt,
+                                          cfg.conv_width ** -0.5),
+        "conv_b": jnp.zeros((d,), dt),
+        "wi": layers.dense_init(ks[4], d, d, bias=True, dtype=dt),
+        "wr": layers.dense_init(ks[5], d, d, bias=True, dtype=dt),
+        # Lambda param: a = sigmoid(lam) in ~(0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, d).astype(dt),
+    }
+    return {"rglru": p}
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Per-channel causal conv, width W. x (B,T,d)."""
+    W = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)            # (B,T+W-1,d)
+    w = p["conv_w"].astype(x.dtype)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    y = y + p["conv_b"].astype(x.dtype)
+    return y, xp[:, -(W - 1):]
+
+
+def _rglru_scan(a, gx):
+    """h_t = a_t * h_{t-1} + gx_t via associative scan over T."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    aT, bT = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return bT
+
+
+def rglru_forward(p, cfg: ModelConfig, x, state=None
+                  ) -> Tuple[jax.Array, Dict]:
+    """x (B,T,d); state {"conv": (B,W-1,d), "h": (B,d)} or None."""
+    p = p["rglru"]
+    B, T, d = x.shape
+    gate = jax.nn.gelu(layers.dense(p["w_gate"], x))
+    xb = layers.dense(p["w_x"], x)
+    xb = annotate(xb, "batch", "seq", "rnn")
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = _causal_conv(p, xb, conv_state)
+
+    i_t = jax.nn.sigmoid(layers.dense(p["wi"], xb).astype(jnp.float32))
+    r_t = jax.nn.sigmoid(layers.dense(p["wr"], xb).astype(jnp.float32))
+    # a = sigmoid(lam)^(c * r): log a = -c * r * softplus(-lam)
+    log_a = -cfg.lru_c * r_t * jax.nn.softplus(-p["lam"].astype(jnp.float32))
+    a_t = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) \
+        * (i_t * xb.astype(jnp.float32))
+    if state is not None:
+        # fold initial h into the first step: h_1 = a_1 h_0 + gx_1
+        gx = gx.at[:, 0].add(a_t[:, 0] * state["h"].astype(jnp.float32))
+    h = _rglru_scan(a_t, gx)                                  # (B,T,d)
+    h = annotate(h.astype(x.dtype), "batch", "seq", "rnn")
+    y = layers.dense(p["w_out"], h * gate)
+    return y, {"conv": new_conv, "h": h[:, -1]}
+
+
+def rglru_decode(p, cfg: ModelConfig, x, state) -> Tuple[jax.Array, Dict]:
+    return rglru_forward(p, cfg, x, state)

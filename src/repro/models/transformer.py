@@ -1,0 +1,390 @@
+"""Model assembly: block zoo -> scanned layer stack -> LM / enc-dec.
+
+Layers are stacked by *pattern period* (cfg.block_pattern cycled), so a
+homogeneous arch scans all layers in one ``lax.scan`` (compact HLO, fast
+compiles) and hybrids like RecurrentGemma (rglru, rglru, local_attn)
+scan over periods; remainder layers run unrolled. ``cfg.remat="layer"``
+wraps each period in ``jax.checkpoint``.
+
+Public API:
+  init_params(key, cfg)                     -> params pytree
+  forward(params, cfg, batch, ...)          -> logits [+ cache] [+ aux]
+  init_cache(cfg, batch, max_len, ...)      -> decode cache pytree
+  decode_step(params, cfg, tokens, cache)   -> (logits, new cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe, recurrent
+from repro.models.config import ModelConfig
+from repro.sharding import annotate
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig, kind: str, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict = {"norm1": layers.rmsnorm_init(cfg.d_model, dt),
+               "norm2": layers.rmsnorm_init(cfg.d_model, dt)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = attn.attn_init(ks[0], cfg)
+    elif kind == "rwkv6":
+        p.update(recurrent.rwkv6_init(ks[0], cfg))
+    elif kind == "rglru":
+        p.update(recurrent.rglru_init(ks[0], cfg))
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = layers.rmsnorm_init(cfg.d_model, dt)
+        p["xattn"] = attn.attn_init(ks[2], cfg, cross=True)
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        d, f = cfg.d_model, cfg.d_ff
+        mlp = {"wi": layers.dense_init(ks[1], d, f, dtype=dt),
+               "wo": layers.dense_init(ks[3], f, d, dtype=dt)}
+        if cfg.activation.endswith("_glu"):
+            mlp["wg"] = layers.dense_init(
+                jax.random.fold_in(ks[1], 1), d, f, dtype=dt)
+        p["mlp"] = mlp
+    return p
+
+
+def _mlp_forward(p, cfg: ModelConfig, x):
+    h = layers.dense(p["wi"], x)
+    h = annotate(h, "batch", "seq", "mlp")
+    if cfg.activation.endswith("_glu"):
+        h = layers.activation(cfg.activation, h, layers.dense(p["wg"], x))
+    else:
+        h = layers.activation(cfg.activation, h)
+    return layers.dense(p["wo"], h)
+
+
+def _block_forward(p, cfg: ModelConfig, kind: str, x, *, positions,
+                   causal=True, enc_out=None, kv_repeat=1, state=None):
+    """Returns (x, aux, new_state). state=None => stateless (training)."""
+    aux = jnp.float32(0.0)
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    # Megatron-SP transition: boundary residuals are sequence-sharded;
+    # gather seq here (one all-gather) so head/expert sharding inside the
+    # block never straddles a seq-sharded tensor.
+    h = annotate(h, "batch", "seq", "embed")
+    new_state = None
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        a = attn.attention_forward(p["attn"], cfg, h, positions=positions,
+                                   causal=causal, window=window,
+                                   kv_repeat=kv_repeat)
+    elif kind == "rwkv6":
+        a, new_state = recurrent.rwkv6_forward(p, cfg, h, state)
+    elif kind == "rglru":
+        a, new_state = recurrent.rglru_forward(p, cfg, h, state)
+    # annotate the block *output* seq-sharded before the residual add:
+    # XLA then lowers the TP partial-sum as reduce-scatter instead of
+    # all-reduce (Megatron-SP), cutting TP collective bytes ~2x/16-way
+    a = annotate(a, "batch", "seq_boundary", "embed")
+    x = x + a
+    if "xattn" in p:
+        hx = layers.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.attention_forward(
+            p["xattn"], cfg, hx, positions=None, kv_x=enc_out,
+            causal=False, rope_on=False)
+    h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h2 = annotate(h2, "batch", "seq", "embed")
+    if cfg.is_moe:
+        m, aux = moe.moe_forward(p["moe"], cfg, h2)
+    else:
+        m = _mlp_forward(p["mlp"], cfg, h2)
+    m = annotate(m, "batch", "seq_boundary", "embed")
+    x = x + m
+    x = annotate(x, "batch", "seq_boundary", "embed")
+    return x, aux, new_state
+
+
+# ---------------------------------------------------------------------------
+# stacked layer groups
+# ---------------------------------------------------------------------------
+def _pattern_layout(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(period_kinds, n_periods, remainder_kinds)."""
+    pat = tuple(cfg.block_pattern)
+    n = cfg.n_layers
+    per = len(pat)
+    return pat, n // per, tuple(pat[i] for i in range(n % per))
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    V = padded_vocab(cfg)
+    keys = jax.random.split(key, cfg.n_layers + cfg.encoder_layers + 4)
+    pat, n_per, rem = _pattern_layout(cfg)
+    cross = cfg.is_enc_dec
+
+    params: Dict = {
+        "embed": {"table": layers.truncated_normal(
+            keys[-1], (V, cfg.d_model), dt, 1.0)},
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[-2], cfg.d_model, V, dtype=dt)
+
+    # decoder (or decoder-only) layers, grouped by pattern period
+    li = 0
+    groups = []
+    for g in range(n_per):
+        period = {}
+        for j, kind in enumerate(pat):
+            period[f"p{j}_{kind}"] = _block_init(
+                keys[li], cfg, kind, cross=cross)
+            li += 1
+        groups.append(period)
+    if groups:
+        params["layers"] = _stack(groups)
+    rem_params = []
+    for kind in rem:
+        rem_params.append((kind, _block_init(keys[li], cfg, kind,
+                                             cross=cross)))
+        li += 1
+    if rem_params:
+        params["layers_rem"] = {f"r{i}_{k}": p
+                                for i, (k, p) in enumerate(rem_params)}
+
+    if cfg.is_enc_dec:
+        enc = []
+        for _ in range(cfg.encoder_layers):
+            enc.append({"p0_attn": _block_init(keys[li], cfg, "attn")})
+            li += 1
+        params["encoder"] = _stack(enc)
+        params["enc_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+    return params
+
+
+def _apply_period(p_period, cfg: ModelConfig, x, *, positions, causal,
+                  enc_out, kv_repeat):
+    aux = jnp.float32(0.0)
+    for name in sorted(p_period):
+        kind = name.split("_", 1)[1]
+        x, a, _ = _block_forward(p_period[name], cfg, kind, x,
+                                 positions=positions, causal=causal,
+                                 enc_out=enc_out, kv_repeat=kv_repeat)
+        aux = aux + a
+    return x, aux
+
+
+def _run_stack(params, cfg: ModelConfig, x, *, positions, causal=True,
+               enc_out=None, kv_repeat=1, stack_key="layers",
+               rem_key="layers_rem"):
+    base_fn = functools.partial(_apply_period, cfg=cfg,
+                                positions=positions, causal=causal,
+                                enc_out=enc_out, kv_repeat=kv_repeat)
+
+    def period_fn(p, h):
+        return base_fn(p, x=h)
+    if cfg.remat == "layer":
+        period_fn = jax.checkpoint(period_fn, policy=None)
+
+    aux_total = jnp.float32(0.0)
+    if stack_key in params:
+        def body(h_aux, p_period):
+            h, aux = h_aux
+            h, a = period_fn(p_period, h)
+            return (h, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params[stack_key])
+    if rem_key in params:
+        for name in sorted(params[rem_key]):
+            kind = name.split("_", 1)[1]
+            x, a, _ = _block_forward(params[rem_key][name], cfg, kind, x,
+                                     positions=positions, causal=causal,
+                                     enc_out=enc_out, kv_repeat=kv_repeat)
+            aux_total = aux_total + a
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    return annotate(x, "batch", "seq_boundary", "embed")
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(x.dtype).T
+        logits = x @ w
+    else:
+        logits = layers.dense(params["lm_head"], x)
+    logits = annotate(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32)
+
+
+def encode(params, cfg: ModelConfig, enc_frames):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = enc_frames.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(x.shape[1])
+    x, _ = _run_stack(params, cfg, x, positions=pos, causal=False,
+                      stack_key="encoder", rem_key="_none")
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, enc_frames=None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Backbone only: final hidden states (pre final-norm) + moe aux."""
+    B, T = tokens.shape
+    enc_out = None
+    if cfg.is_enc_dec:
+        assert enc_frames is not None
+        enc_out = encode(params, cfg, enc_frames)
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(T)
+    return _run_stack(params, cfg, x, positions=positions, causal=True,
+                      enc_out=enc_out, kv_repeat=cfg.kv_repeat)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, enc_frames=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training / prefill forward. Returns (logits, moe aux loss)."""
+    x, aux = forward_hidden(params, cfg, tokens, enc_frames=enc_frames)
+    return lm_logits(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, O(1) per step given the cache)
+# ---------------------------------------------------------------------------
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 start_len) -> Dict:
+    if kind in ("attn", "local_attn"):
+        size = max_len
+        if kind == "local_attn" and cfg.window is not None:
+            size = min(max_len, cfg.window)
+        c = attn.init_kv_cache(cfg, batch, size, cfg.kv_repeat,
+                               dtype=jnp.dtype(cfg.dtype))
+        c["len"] = jnp.full((batch,), start_len, jnp.int32)
+        return c
+    if kind == "rwkv6":
+        K = cfg.rwkv_head_dim
+        H = cfg.d_model // K
+        return {"shift": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "wkv": annotate(jnp.zeros((batch, H, K, K), jnp.float32),
+                                "batch", "rheads", "rkey", "rvalue")}
+    if kind == "rglru":
+        return {"conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model),
+                                  jnp.dtype(cfg.dtype)),
+                "h": annotate(jnp.zeros((batch, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)),
+                              "batch", "rnn")}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               start_len: int = 0, params=None, enc_frames=None) -> Dict:
+    """Decode cache pytree (optionally with precomputed cross-attn KV)."""
+    pat, n_per, rem = _pattern_layout(cfg)
+    cache: Dict = {}
+    if n_per:
+        period = {}
+        for j, kind in enumerate(pat):
+            one = _block_cache(cfg, kind, batch, max_len, start_len)
+            period[f"p{j}_{kind}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_per,) + x.shape), one)
+        cache["layers"] = period
+    if rem:
+        cache["layers_rem"] = {
+            f"r{i}_{k}": _block_cache(cfg, k, batch, max_len, start_len)
+            for i, k in enumerate(rem)}
+    if cfg.is_enc_dec:
+        assert params is not None and enc_frames is not None
+        enc_out = encode(params, cfg, enc_frames)
+
+        def cross_kv(p_period):
+            px = p_period["xattn"]
+            k = layers.dense(px["wk"], enc_out)      # (B,Se,KV,hd)
+            v = layers.dense(px["wv"], enc_out)
+            return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+        if n_per:
+            cache["cross"] = {
+                name: jax.vmap(cross_kv)(params["layers"][name])
+                for name in params["layers"]}
+    return cache
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, x, bcache, cross_kv=None):
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        a, bcache = attn.attention_decode(p["attn"], cfg, h, bcache,
+                                          window=window,
+                                          kv_repeat=cfg.kv_repeat)
+    elif kind == "rwkv6":
+        a, bcache = recurrent.rwkv6_decode(p, cfg, h, bcache)
+    elif kind == "rglru":
+        a, bcache = recurrent.rglru_decode(p, cfg, h, bcache)
+    x = x + a
+    if "xattn" in p and cross_kv is not None:
+        hx = layers.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        q = layers.dense(p["xattn"]["wq"], hx).transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       cross_kv["k"].astype(jnp.float32))
+        s = s * cfg.head_dim ** -0.5
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", pr.astype(cross_kv["v"].dtype),
+                       cross_kv["v"]).transpose(0, 2, 1, 3)
+        y = jnp.einsum("bthd,hdm->btm", o,
+                       p["xattn"]["wo"]["kernel"].astype(o.dtype))
+        x = x + y
+    h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        m, _ = moe.moe_dense_forward(p["moe"], cfg, h2)
+    else:
+        m = _mlp_forward(p["mlp"], cfg, h2)
+    return x + m, bcache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens (B, 1) -> (logits (B, 1, V), updated cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    pat, n_per, rem = _pattern_layout(cfg)
+    new_cache = dict(cache)
+
+    if "layers" in params:
+        def body(h, xs):
+            p_period, c_period, cross = xs
+            new_c = {}
+            for name in sorted(p_period):
+                kind = name.split("_", 1)[1]
+                ckv = cross[name] if cross is not None else None
+                h, new_c[name] = _block_decode(p_period[name], cfg, kind,
+                                               h, c_period[name], ckv)
+            return h, new_c
+        cross = cache.get("cross")
+        xs = (params["layers"], cache["layers"], cross)
+        x, updated = jax.lax.scan(body, x, xs)
+        new_cache["layers"] = updated
+    if "layers_rem" in params:
+        rem_cache = dict(cache["layers_rem"])
+        for name in sorted(params["layers_rem"]):
+            kind = name.split("_", 1)[1]
+            x, rem_cache[name] = _block_decode(
+                params["layers_rem"][name], cfg, kind, x, rem_cache[name])
+        new_cache["layers_rem"] = rem_cache
+    return lm_logits(params, cfg, x), new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_opt_state,
+                               schedule, zero1_shardings, global_norm)
+from repro.optim import compression

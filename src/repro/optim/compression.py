@@ -1,0 +1,85 @@
+"""Int8 error-feedback gradient compression for cross-replica reduction.
+
+The distributed-optimization trick: before the data-parallel gradient
+all-reduce, each replica quantizes its gradient to int8 with a per-
+tensor scale and keeps the quantization residual in a local error-
+feedback buffer that is added back the next step (Seide et al. 1-bit
+SGD / EF-SGD semantics, int8 variant). Wire bytes drop 4x vs f32 with
+no asymptotic convergence penalty.
+
+Two entry points:
+  * compress/decompress + ef buffers — pure functions for tests and for
+    the wire format used by the checkpoint/elastic layer;
+  * all_reduce_compressed — a shard_map psum over the quantized int
+    payload (the actual collective carries int32 accumulations of int8
+    values; scales ride a tiny side-channel psum).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                                    jax.Array]:
+    """(grad, error_buffer) -> (q int8, scale f32 scalar, new_error)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_buffers(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_tree(grads: Any, errors: Any) -> Tuple[Any, Any, Any]:
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(tdef, qs),
+            jax.tree.unflatten(tdef, scales),
+            jax.tree.unflatten(tdef, errs))
+
+
+def all_reduce_compressed(grads: Any, errors: Any, axis_name: str
+                          ) -> Tuple[Any, Any]:
+    """Inside shard_map: mean-reduce int8-compressed grads over axis.
+
+    Returns (reduced f32 grads, new error buffers). The psum payload is
+    int8 widened to int32 (sum of <=2^24 replicas' int8 fits exactly);
+    per-tensor scales are psum'd alongside (replicas may have different
+    scales, so each replica's contribution is de-scaled after the sum
+    of q*scale — implemented as psum of the already-scaled f16 payload
+    would lose the compression, so we psum q and the max-scale and
+    accept the standard EF approximation of a shared scale).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, s, ne = compress(g, e)
+        s_shared = jax.lax.pmax(s, axis_name)
+        # re-quantize against the shared scale so the integer sum is exact
+        g32 = g.astype(jnp.float32) + e
+        q = jnp.clip(jnp.round(g32 / s_shared), -127, 127).astype(jnp.int8)
+        ne = g32 - q.astype(jnp.float32) * s_shared
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * s_shared / n), ne
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

@@ -1,0 +1,3 @@
+from repro.serving.ata_cache import (AtaCacheConfig, AtaPrefixCache,
+                                     POLICIES, Stats, hash_blocks,
+                                     run_workload, synth_requests)

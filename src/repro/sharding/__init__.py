@@ -1,0 +1,6 @@
+from repro.sharding.rules import (annotate, make_rules, param_axes,
+                                  param_shardings, rules_context,
+                                  logical_to_spec)
+
+__all__ = ["annotate", "make_rules", "param_axes", "param_shardings",
+           "rules_context", "logical_to_spec"]

@@ -1,0 +1,232 @@
+"""Logical-axis sharding: one rules table per (arch, mesh).
+
+Model code annotates activations with *logical* axis names via
+``annotate(x, "batch", "seq", "embed")`` and parameters carry logical
+axes by path pattern (``param_axes``). ``make_rules`` maps logical axes
+to mesh axes per architecture:
+
+  head-TP archs (n_heads % model == 0): attention heads over "model",
+      KV heads virtually expanded to the model degree (MaxText-style);
+  replicated-attention archs (qwen1.5 H=20, whisper H=6, granite-3b
+      H=24): attention params replicated, decode KV cache sharded over
+      the *cache sequence* axis (flash-decoding style);
+  rwkv6: the WKV state and v/gate/out projections shard the V channel
+      ("rvalue") over "model" — the recurrence is independent per V
+      column, so only the out-projection all-reduces;
+  rglru: diagonal recurrence is channel-independent -> "rnn" over model;
+  MoE: expert axis over "model" when divisible (granite-1b, 32e), else
+      per-expert d_ff over "model" (granite-3b, 40e);
+  residual stream: batch over ("pod","data"), boundary activations
+      sequence-sharded over "model" (Megatron sequence parallelism).
+
+Batch-1 shapes (long_500k) drop the batch mapping instead of failing.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Rules]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def rules_context(mesh: Optional[Mesh], rules: Optional[Rules]):
+    """Activate (mesh, rules) for annotate() within the context."""
+    prev = _current()
+    _state.ctx = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...], rules: Rules) -> P:
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+        elif isinstance(m, tuple):
+            parts.append(m if len(m) > 1 else m[0])
+        else:
+            parts.append(m)
+    return P(*parts)
+
+
+def annotate(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without context)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter logical axes by path pattern
+# ---------------------------------------------------------------------------
+#: pattern -> logical axes (matched against 'a/b/c' flattened path).
+_PARAM_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(?:^|.*/)embed/table$", ("vocab", "embed")),
+    (r"(?:^|.*/)lm_head/kernel$", ("embed", "vocab")),
+    (r"(?:^|.*/).*(attn|xattn)/w[qQ]/kernel$", ("embed", "heads", "head_dim")),
+    (r"(?:^|.*/).*(attn|xattn)/w[kv]/kernel$", ("embed", "kv_heads", "head_dim")),
+    (r"(?:^|.*/).*(attn|xattn)/wo/kernel$", ("heads", "head_dim", "embed")),
+    (r"(?:^|.*/).*(attn|xattn)/w[qQ]/bias$", ("heads", "head_dim")),
+    (r"(?:^|.*/).*(attn|xattn)/w[kv]/bias$", ("kv_heads", "head_dim")),
+    (r"(?:^|.*/).*(attn|xattn)/wo/bias$", ("embed",)),
+    (r"(?:^|.*/)(q|k)_norm/scale$", ("head_dim",)),
+    (r"(?:^|.*/)mlp/wi/kernel$", ("embed", "mlp")),
+    (r"(?:^|.*/)mlp/wg/kernel$", ("embed", "mlp")),
+    (r"(?:^|.*/)mlp/wo/kernel$", ("mlp", "embed")),
+    (r"(?:^|.*/)moe/router/kernel$", ("embed", "experts")),
+    (r"(?:^|.*/)moe/wi/kernel$", ("experts", "embed", "mlp")),
+    (r"(?:^|.*/)moe/wg/kernel$", ("experts", "embed", "mlp")),
+    (r"(?:^|.*/)moe/wo/kernel$", ("experts", "mlp", "embed")),
+    (r"(?:^|.*/)rwkv/w_(r|k|w)/kernel$", ("embed", "embed2")),
+    (r"(?:^|.*/)rwkv/w_(v|g)/kernel$", ("embed", "rvalue_flat")),
+    (r"(?:^|.*/)rwkv/w_out/kernel$", ("rvalue_flat", "embed")),
+    (r"(?:^|.*/)rwkv/mix_.*$", ("embed",)),
+    (r"(?:^|.*/)rwkv/lora_(a)$", ("embed", "lora")),
+    (r"(?:^|.*/)rwkv/lora_(b)$", ("lora", "embed")),
+    (r"(?:^|.*/)rwkv/u$", ("rheads", "rkey")),
+    (r"(?:^|.*/)rwkv/w_base$", ("embed",)),
+    (r"(?:^|.*/)rwkv/ln_(scale|bias)$", ("rvalue_flat",)),
+    (r"(?:^|.*/)rglru/w_(x|gate)/kernel$", ("embed", "rnn")),
+    (r"(?:^|.*/)rglru/w_out/kernel$", ("rnn", "embed")),
+    (r"(?:^|.*/)rglru/conv_w$", ("conv", "rnn")),
+    (r"(?:^|.*/)rglru/conv_b$", ("rnn",)),
+    (r"(?:^|.*/)rglru/(wi|wr)/kernel$", ("embed", "rnn")),
+    (r"(?:^|.*/)rglru/(wi|wr)/bias$", ("rnn",)),
+    (r"(?:^|.*/)rglru/lam$", ("rnn",)),
+    (r".*norm.*/(scale|bias)$", ("embed",)),
+    (r"(?:^|.*/)bias$", ("mlp",)),           # mlp wi bias (rare)
+)
+
+
+def param_axes(params) -> object:
+    """Mirror pytree of logical-axes tuples, resolved by path pattern."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        spath = "/".join(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path)
+        for pat, axes in _PARAM_PATTERNS:
+            if re.match(pat, spath):
+                if len(axes) != leaf.ndim:
+                    # stacked-layer leading axis
+                    if len(axes) + 1 == leaf.ndim:
+                        axes = (None,) + axes
+                    else:
+                        raise ValueError(
+                            f"{spath}: rank {leaf.ndim} vs axes {axes}")
+                out.append(axes)
+                break
+        else:
+            raise ValueError(f"no axis rule for param {spath}")
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def param_shardings(params, mesh: Mesh, rules: Rules):
+    axes = param_axes(params)
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, logical_to_spec(a, rules)),
+        axes, is_leaf=lambda a: isinstance(a, tuple))
+
+
+# ---------------------------------------------------------------------------
+# per-arch rule construction
+# ---------------------------------------------------------------------------
+def make_rules(cfg, mesh: Mesh, *, batch_size: Optional[int] = None,
+               seq_shard_boundary: bool = True,
+               profile: str = "tp") -> Rules:
+    """Logical->mesh mapping for a ModelConfig on a mesh.
+
+    profile:
+      "tp" — baseline: model axis carries vocab/mlp/heads tensor
+             parallelism (+ sequence-parallel boundaries);
+      "dp" — pure data parallelism: the model axis joins the batch axes
+             and parameters replicate (ZeRO-1 still shards optimizer
+             state). Roofline-optimal for small models where TP
+             collectives dominate compute (EXPERIMENTS.md §Perf).
+    """
+    names = mesh.axis_names
+    model_ax = "model" if "model" in names else None
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    msize = mesh.shape["model"] if model_ax else 1
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+
+    if profile == "dp" and model_ax:
+        batch_axes: Optional[Tuple[str, ...]] = data_axes + (model_ax,)
+        total = dsize * msize
+        if batch_size is not None and batch_size % total:
+            batch_axes = (data_axes if batch_size % max(dsize, 1) == 0
+                          else None)
+        none_rules: Rules = {k: None for k in (
+            "seq", "seq_boundary", "embed", "embed2", "vocab", "mlp",
+            "heads", "kv_heads", "kv_heads_act", "head_dim",
+            "cache_kv_heads", "cache_seq", "experts", "expert_mlp",
+            "capacity", "rheads", "rkey", "rvalue", "rvalue_flat",
+            "lora", "rnn", "conv", "frames")}
+        none_rules["batch"] = batch_axes
+        return none_rules
+
+    head_tp = (cfg.n_heads % msize == 0) if msize > 1 else False
+    moe_ep = cfg.is_moe and cfg.n_experts % msize == 0
+
+    batch = data_axes if data_axes else None
+    if batch_size is not None and batch_size % max(dsize, 1):
+        batch = None    # batch-1 decode shapes: leave data idle
+
+    rules: Rules = {
+        "batch": batch,
+        "seq": None,
+        # Megatron-style sequence parallelism on residual boundaries
+        "seq_boundary": (model_ax,) if seq_shard_boundary else None,
+        "embed": None,
+        "embed2": None,
+        "vocab": (model_ax,),
+        "mlp": (model_ax,),
+        "heads": (model_ax,) if head_tp else None,
+        # params keep the raw KV head count (may not divide the mesh);
+        # activations are annotated post-expansion with kv_heads_act
+        "kv_heads": ((model_ax,) if head_tp
+                     and cfg.n_kv_heads % msize == 0 else None),
+        "kv_heads_act": (model_ax,) if head_tp else None,
+        "head_dim": None,
+        # decode KV cache: heads when head-TP, else cache-sequence
+        "cache_kv_heads": (model_ax,) if head_tp else None,
+        "cache_seq": None if head_tp else (model_ax,),
+        "experts": (model_ax,) if moe_ep else None,
+        "expert_mlp": None if moe_ep else (model_ax,),
+        "capacity": None,
+        # rwkv: shard the V channel of the state everywhere it appears
+        "rheads": None,
+        "rkey": None,
+        "rvalue": (model_ax,),
+        "rvalue_flat": (model_ax,),
+        "lora": None,
+        "rnn": (model_ax,),
+        "conv": None,
+        # frames for the audio encoder stub
+        "frames": None,
+    }
+    if moe_ep:
+        # experts carry the model axis; per-expert d_ff stays local
+        rules["mlp"] = None
+    return rules

@@ -1,0 +1,2 @@
+from repro.train.step import (init_train_state, loss_fn, make_train_step)
+from repro.train.loss import chunked_cross_entropy

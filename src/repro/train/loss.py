@@ -1,0 +1,54 @@
+"""Sequence-chunked softmax cross-entropy.
+
+The (B, S, V) logits tensor of a 256k-vocab model at 1M tokens is ~1 TB
+in f32 — never materialized: the final hidden states are scanned in
+sequence chunks, each chunk projects + losses + (in backward, recomputes
+under jax.checkpoint). This is the memory-critical path for nemotron /
+recurrentgemma (256k vocab) training cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import annotate
+
+
+def _chunk_xent(params, cfg: ModelConfig, h_chunk, labels_chunk):
+    from repro.models.transformer import lm_logits
+    logits = lm_logits(params, cfg, h_chunk)          # (B, c, V) f32
+    V = logits.shape[-1]
+    mask = labels_chunk >= 0
+    labels_safe = jnp.where(mask, labels_chunk, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_cross_entropy(params, cfg: ModelConfig, h, labels,
+                          chunk: int = 128):
+    """h (B,S,d) final hidden states; labels (B,S) with -1 = pad."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    f = functools.partial(_chunk_xent, params, cfg)
+    f = jax.checkpoint(f, policy=None)
+
+    def body(carry, i):
+        tot, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, 1)
+        s, m = f(hc, lc)
+        return (tot + s, cnt + m), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                 jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)

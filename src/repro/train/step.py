@@ -1,0 +1,62 @@
+"""Training step: loss -> grad -> clip -> AdamW, with optional
+microbatch gradient accumulation (lax.scan) for memory headroom."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward_hidden
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+from repro.train.loss import chunked_cross_entropy
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    h, aux = forward_hidden(params, cfg, batch["tokens"],
+                            enc_frames=batch.get("enc_frames"))
+    loss = chunked_cross_entropy(params, cfg, h, batch["labels"])
+    return loss + AUX_WEIGHT * aux
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, cfg, batch)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        params = state["params"]
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                l, g = grads_of(params, mb)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+            split = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(micro, zero, split)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        new_params, opt, metrics = apply_updates(
+            opt_cfg, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": opt}, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}

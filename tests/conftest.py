@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run single-device (smoke/bench fidelity); multi-device tests
+# spawn subprocesses with their own XLA_FLAGS (see helpers below).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,151 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ata_tag_probe import ata_tag_probe
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.wkv6 import wkv6
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# ata_tag_probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,C,S,W,br,bc", [
+    (128, 8, 8, 64, 64, 4),
+    (256, 16, 8, 64, 128, 8),
+    (64, 4, 16, 8, 64, 4),
+    (32, 2, 2, 4, 32, 2),
+])
+def test_ata_tag_probe_sweep(R, C, S, W, br, bc):
+    tags = jnp.asarray(RNG.integers(0, 4096, (C, S, W)), jnp.int32)
+    valid = jnp.asarray(RNG.random((C, S, W)) < 0.7)
+    qtag = jnp.asarray(RNG.integers(0, 4096, R), jnp.int32)
+    set_idx = jnp.asarray(RNG.integers(0, S, R), jnp.int32)
+    h1, w1 = ata_tag_probe(set_idx, qtag, tags, valid, br=br, bc=bc)
+    h2, w2 = ref.ata_tag_probe_ref(set_idx, qtag, tags, valid)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(
+        np.where(np.asarray(h1), np.asarray(w1), 0),
+        np.where(np.asarray(h2), np.asarray(w2), 0))
+
+
+def test_ata_tag_probe_planted_hits():
+    C, S, W, R = 4, 8, 16, 64
+    tags = jnp.zeros((C, S, W), jnp.int32)
+    valid = jnp.zeros((C, S, W), bool)
+    qtag = jnp.asarray(RNG.integers(1, 1000, R), jnp.int32)
+    set_idx = jnp.asarray(RNG.integers(0, S, R), jnp.int32)
+    tags = tags.at[2, set_idx[5], 3].set(qtag[5])
+    valid = valid.at[2, set_idx[5], 3].set(True)
+    hits, ways = ata_tag_probe(set_idx, qtag, tags, valid, br=32, bc=2)
+    assert bool(hits[5, 2]) and int(ways[5, 2]) == 3
+    assert int(hits.sum()) >= 1
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,D,bq,bk,causal,window", [
+    (1, 4, 4, 128, 128, 64, 64, 64, True, None),
+    (2, 8, 2, 256, 256, 64, 128, 128, True, None),     # GQA
+    (1, 4, 2, 128, 128, 32, 64, 32, True, 48),         # window
+    (2, 4, 4, 64, 64, 128, 64, 64, False, None),       # bidirectional
+    (1, 2, 1, 1, 128, 64, 1, 64, False, None),         # decode Tq=1
+])
+def test_flash_attention_sweep(B, Hq, Hkv, Tq, Tk, D, bq, bk, causal,
+                               window):
+    q = randn(B, Hq, Tq, D, scale=0.5)
+    k = randn(B, Hkv, Tk, D, scale=0.5)
+    v = randn(B, Hkv, Tk, D, scale=0.5)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         bq=bq, bk=bk)
+    o2 = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_kv_len():
+    B, Hq, Hkv, Tk, D = 2, 4, 2, 128, 64
+    q = randn(B, Hq, 1, D)
+    k = randn(B, Hkv, Tk, D)
+    v = randn(B, Hkv, Tk, D)
+    kl = jnp.asarray([37, 100], jnp.int32)
+    o1 = flash_attention(q, k, v, kv_len=kl, causal=False, bq=1, bk=32)
+    o2 = ref.attention_len_ref(q, k, v, kl, causal=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = randn(1, 2, 64, 64, dtype=jnp.bfloat16)
+    k = randn(1, 2, 64, 64, dtype=jnp.bfloat16)
+    v = randn(1, 2, 64, 64, dtype=jnp.bfloat16)
+    o1 = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    o2 = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,T,K,V,chunk", [
+    (1, 2, 128, 64, 64, 64),
+    (2, 3, 192, 64, 64, 32),
+    (1, 1, 64, 32, 64, 64),     # K != V
+    (2, 2, 256, 64, 64, 128),
+])
+def test_wkv6_sweep(B, H, T, K, V, chunk):
+    r = randn(B, H, T, K, scale=0.5)
+    k = randn(B, H, T, K, scale=0.5)
+    v = randn(B, H, T, V, scale=0.5)
+    w = -jnp.exp(randn(B, H, T, K))
+    u = randn(H, K, scale=0.5)
+    o1, s1 = wkv6(r, k, v, w, u, chunk=chunk)
+    o2, s2 = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_wkv6_initial_state_chaining():
+    """Processing [first half] then [second half] == whole sequence."""
+    B, H, T, K = 1, 2, 128, 64
+    r = randn(B, H, T, K, scale=0.5)
+    k = randn(B, H, T, K, scale=0.5)
+    v = randn(B, H, T, K, scale=0.5)
+    w = -jnp.exp(randn(B, H, T, K))
+    u = randn(H, K, scale=0.5)
+    o_full, s_full = wkv6(r, k, v, w, u, chunk=32)
+    h = T // 2
+    o1, s1 = wkv6(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h],
+                  u, chunk=32)
+    o2, s2 = wkv6(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:],
+                  u, initial_state=s1, chunk=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(o_full), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_wkv6_strong_decay_stable():
+    B, H, T, K = 1, 1, 128, 64
+    r = randn(B, H, T, K)
+    k = randn(B, H, T, K)
+    v = randn(B, H, T, K)
+    w = jnp.full((B, H, T, K), -20.0)          # near-total decay
+    u = randn(H, K)
+    o, s = wkv6(r, k, v, w, u, chunk=64)
+    assert not bool(jnp.isnan(o).any())
+    assert not bool(jnp.isinf(o).any())

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward + one train step on CPU, asserting shapes and no NaNs; decode
+consistency for each block family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.is_enc_dec:
+        out["enc_frames"] = jax.random.normal(
+            RNG, (B, S // 2, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(RNG, cfg)
+    b = _batch(cfg)
+    logits, aux = T.forward(params, cfg, b["tokens"],
+                            enc_frames=b.get("enc_frames"))
+    assert logits.shape == (2, 32, T.padded_vocab(cfg))
+    assert not np.isnan(np.asarray(logits)).any(), f"{arch}: NaN logits"
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state = init_train_state(RNG, cfg)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(total_steps=10)))
+    state, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: NaN loss"
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-3b",
+                                  "recurrentgemma-9b", "whisper-tiny"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(RNG, cfg)
+    B, S = 2, 20
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    kw = ({"enc_frames": jax.random.normal(RNG, (B, S // 2, cfg.d_model),
+                                           jnp.float32)}
+          if cfg.is_enc_dec else {})
+    full, _ = T.forward(params, cfg, tokens, **kw)
+    cache = T.init_cache(cfg, B, S, params=params, **kw)
+    step = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.abs(full - dec).max() / (jnp.abs(full).max() + 1e-9))
+    assert rel < 2e-2, f"{arch}: decode diverges rel={rel}"
+
+
+def test_moe_decode_matches_forward_high_capacity():
+    cfg = dataclasses.replace(get_smoke_config("granite-moe-1b-a400m"),
+                              capacity_factor=8.0)
+    params = T.init_params(RNG, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    full, _ = T.forward(params, cfg, tokens)
+    cache = T.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.abs(full - dec).max() / jnp.abs(full).max())
+    assert rel < 2e-2
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (the spec table)."""
+    spec = {
+        "rwkv6-3b": (32, 2560, 8960, 65536),
+        "qwen3-0.6b": (28, 1024, 3072, 151936),
+        "qwen1.5-4b": (40, 2560, 6912, 151936),
+        "nemotron-4-15b": (32, 6144, 24576, 256000),
+        "stablelm-12b": (40, 5120, 13824, 100352),
+        "granite-moe-3b-a800m": (32, 1536, 512, 49155),
+        "granite-moe-1b-a400m": (24, 1024, 512, 49155),
+        "recurrentgemma-9b": (38, 4096, 12288, 256000),
+        "whisper-tiny": (4, 384, 1536, 51865),
+        "chameleon-34b": (48, 8192, 22016, 65536),
+    }
+    for arch, (L, d, f, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == \
+            (L, d, f, V), arch
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("granite-moe-1b-a400m").n_experts == 32
+    assert get_config("recurrentgemma-9b").block_pattern == \
+        ("rglru", "rglru", "local_attn")
+    assert get_config("qwen1.5-4b").qkv_bias
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("whisper-tiny").encoder_layers == 4
+
+
+def test_int8_kv_cache_decode():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"),
+                              kv_cache_dtype="int8")
+    params = T.init_params(RNG, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    full, _ = T.forward(params, cfg, tokens)
+    cache = T.init_cache(cfg, B, S)
+    assert cache["layers"]["p0_attn"]["k"].dtype == jnp.int8
+    step = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, tokens[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.abs(full - dec).max() / jnp.abs(full).max())
+    assert rel < 5e-2    # quantized: bounded degradation

@@ -1,0 +1,110 @@
+"""ATA prefix-cache tests: paper Table-I invariants in the serving
+domain + hash/property checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (AtaCacheConfig, AtaPrefixCache, POLICIES,
+                           hash_blocks, run_workload, synth_requests)
+
+CFG = AtaCacheConfig(n_shards=8)
+
+
+@pytest.fixture(scope="module")
+def shared_stats():
+    # 300+ requests: past the cold-start transient, so steady-state
+    # replication behavior (paper Fig. 7a) is observable
+    reqs = synth_requests(300, n_shards=8, shared_frac=0.75, seed=3)
+    return {p: run_workload(p, CFG, reqs) for p in POLICIES}
+
+
+def test_sharing_beats_private_hit_rate(shared_stats):
+    s = shared_stats
+    for pol in ("remote", "decoupled", "ata"):
+        assert s[pol].hit_rate > s["private"].hit_rate + 0.05, pol
+
+
+def test_ata_zero_probe_messages(shared_stats):
+    assert shared_stats["ata"].probe_messages == 0
+    assert shared_stats["remote"].probe_messages > 1000
+
+
+def test_ata_matches_remote_sharing_hit_rate(shared_stats):
+    # same replicated-visibility semantics, without the probe traffic
+    assert abs(shared_stats["ata"].hit_rate
+               - shared_stats["remote"].hit_rate) < 0.02
+
+
+def test_ata_serves_mostly_local_after_warmup(shared_stats):
+    """Paper Fig. 7(a): remote fetches fill the local cache, so hot
+    blocks replicate and service becomes mostly local."""
+    s = shared_stats["ata"]
+    assert s.local_hits > s.remote_hits
+    dec = shared_stats["decoupled"]
+    assert dec.local_hits < dec.remote_hits   # decoupled cannot replicate
+
+
+def test_ata_remote_traffic_below_decoupled(shared_stats):
+    assert (shared_stats["ata"].remote_fetch_blocks
+            < 0.75 * shared_stats["decoupled"].remote_fetch_blocks)
+
+
+def test_low_locality_no_ata_penalty():
+    reqs = synth_requests(150, n_shards=8, shared_frac=0.05, seed=4)
+    s_priv = run_workload("private", CFG, reqs)
+    s_ata = run_workload("ata", CFG, reqs)
+    assert s_ata.hit_rate >= s_priv.hit_rate - 1e-9
+    assert s_ata.probe_messages == 0
+
+
+def test_directory_local_write_rule():
+    """New blocks are sealed only into the requesting shard's pool."""
+    cache = AtaPrefixCache(CFG, "ata")
+    toks = np.arange(64)
+    cache.lookup_prefix(3, toks)
+    for s in range(CFG.n_shards):
+        n = len(cache.pool_payload[s])
+        assert (n > 0) == (s == 3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 999), min_size=32, max_size=96),
+       st.integers(1, 31))
+def test_hash_blocks_prefix_property(tokens, cut):
+    """Equal prefixes hash equally; diverging blocks diverge after."""
+    toks = np.asarray(tokens)
+    block = 16
+    h1 = hash_blocks(toks, block)
+    mod = toks.copy()
+    mod[min(cut, len(mod) - 1)] += 1
+    h2 = hash_blocks(mod, block)
+    cut_block = min(cut, len(mod) - 1) // block
+    np.testing.assert_array_equal(h1[:cut_block], h2[:cut_block])
+    if len(h1) > cut_block:
+        assert (h1[cut_block:] != h2[cut_block:]).all()
+
+
+def test_kernel_backed_directory_probe_agrees():
+    """The serving directory's parallel compare == ata_tag_probe kernel."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    cache = AtaPrefixCache(AtaCacheConfig(n_shards=4, n_sets=8, n_ways=4),
+                           "ata")
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        cache.insert(int(rng.integers(4)), int(rng.integers(1, 2**31)),
+                     "blk")
+    hashes = np.asarray([int(h) for h in
+                         rng.integers(1, 2**31, 64)], np.int64)
+    # plant some known entries
+    for i in range(0, 64, 5):
+        cache.insert(i % 4, int(hashes[i]), "blk")
+    hit_ref, _ = cache.probe(0, hashes, "all")
+    set_idx = (hashes % cache.cfg.n_sets).astype(np.int32)
+    h32 = (hashes % (2**31)).astype(np.int32)
+    tags32 = (cache.tags % (2**31)).astype(np.int32)
+    hits, _ = ops.ata_probe(jnp.asarray(set_idx), jnp.asarray(h32),
+                            jnp.asarray(tags32),
+                            jnp.asarray(cache.valid), impl="interpret",
+                            br=64, bc=4)
+    np.testing.assert_array_equal(np.asarray(hits).any(axis=1), hit_ref)

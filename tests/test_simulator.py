@@ -1,0 +1,133 @@
+"""Behavioural + property tests for the ATA-Cache simulator core."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (APPS, PAPER_GEOMETRY, AppParams, make_trace,
+                        simulate)
+from repro.core.contention import group_rank
+from repro.core import tagarray
+
+
+# ---------------------------------------------------------------------------
+# group_rank: the one contention primitive
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=40),
+       st.data())
+def test_group_rank_matches_python(keys, data):
+    mask = data.draw(st.lists(st.booleans(), min_size=len(keys),
+                              max_size=len(keys)))
+    k = jnp.asarray(keys, jnp.int32)
+    m = jnp.asarray(mask)
+    rank, size = group_rank(k, m, 8)
+    seen = {}
+    for i, (key, on) in enumerate(zip(keys, mask)):
+        if not on:
+            assert int(rank[i]) == 0 and int(size[i]) == 0
+            continue
+        assert int(rank[i]) == seen.get(key, 0)
+        seen[key] = seen.get(key, 0) + 1
+    for i, (key, on) in enumerate(zip(keys, mask)):
+        if on:
+            assert int(size[i]) == seen[key]
+
+
+# ---------------------------------------------------------------------------
+# LRU tag array vs a pure-python reference cache
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=5, max_size=60))
+def test_tagarray_lru_matches_reference(addrs):
+    n_sets, n_ways = 2, 3
+    state = tagarray.init_tag_state(1, n_sets, n_ways)
+    ref = {s: [] for s in range(n_sets)}     # list of addrs, MRU last
+    for t, a in enumerate(addrs):
+        s = a % n_sets
+        arr = jnp.asarray([a], jnp.int32)
+        si = jnp.asarray([s], jnp.int32)
+        zero = jnp.asarray([0], jnp.int32)
+        hit, way, _ = tagarray.probe(state, zero, si, arr)
+        ref_hit = a in ref[s]
+        assert bool(hit[0]) == ref_hit, (t, a)
+        if ref_hit:
+            state = tagarray.touch(state, zero, si, way,
+                                   jnp.int32(t), jnp.asarray([True]))
+            ref[s].remove(a)
+            ref[s].append(a)
+        else:
+            state, _ = tagarray.fill(state, zero, si, way, arr,
+                                     jnp.int32(t), jnp.asarray([True]))
+            if len(ref[s]) == n_ways:
+                ref[s].pop(0)                 # evict LRU
+            ref[s].append(a)
+
+
+def test_probe_many_parallel_compare():
+    state = tagarray.init_tag_state(4, 2, 2)
+    # plant line 7 in caches 1 and 3, set 1
+    for c in (1, 3):
+        state, _ = tagarray.fill(
+            state, jnp.asarray([c]), jnp.asarray([1]), jnp.asarray([0]),
+            jnp.asarray([7]), jnp.int32(0), jnp.asarray([True]))
+    arrays = jnp.asarray([[0, 1, 2, 3]])
+    hits, ways, dirty = tagarray.probe_many(
+        state, arrays, jnp.asarray([1]), jnp.asarray([7]))
+    assert hits.tolist() == [[False, True, False, True]]
+
+
+# ---------------------------------------------------------------------------
+# architecture-level invariants (reduced workloads for speed)
+# ---------------------------------------------------------------------------
+def small(app: AppParams) -> AppParams:
+    return dataclasses.replace(app, rounds=384)
+
+
+@pytest.mark.parametrize("app", ["b+tree", "HS3D"])
+def test_ata_never_loses_to_private(app):
+    tr = make_trace(small(APPS[app]))
+    ipc_priv = simulate("private", tr).ipc
+    ipc_ata = simulate("ata", tr).ipc
+    assert ipc_ata >= ipc_priv * 0.99, (app, ipc_ata, ipc_priv)
+
+
+def test_ata_hit_rate_exceeds_private_on_shared_workload():
+    tr = make_trace(small(APPS["cfd"]))
+    r_priv = simulate("private", tr)
+    r_ata = simulate("ata", tr)
+    assert r_ata.l1_hit_rate > r_priv.l1_hit_rate + 0.1
+    assert r_ata.remote_hit_rate > 0.1
+    assert r_ata.l2_accesses < r_priv.l2_accesses
+
+
+def test_ata_zero_probe_traffic_vs_remote_sharing():
+    tr = make_trace(small(APPS["cfd"]))
+    r_rem = simulate("remote", tr)
+    r_ata = simulate("ata", tr)
+    # remote-sharing floods the NoC with probes; ATA only moves data
+    assert r_ata.noc_flits < 0.5 * r_rem.noc_flits
+
+
+def test_decoupled_latency_penalty():
+    tr = make_trace(small(APPS["doitgen"]))
+    lat_priv = simulate("private", tr).l1_latency
+    lat_dec = simulate("decoupled", tr).l1_latency
+    lat_ata = simulate("ata", tr).l1_latency
+    assert lat_dec > lat_priv * 1.2
+    assert lat_ata < lat_priv * 1.2
+
+
+def test_private_and_decoupled_have_no_remote_hits():
+    tr = make_trace(small(APPS["b+tree"]))
+    assert simulate("private", tr).remote_hit_rate == 0.0
+    assert simulate("decoupled", tr).remote_hit_rate == 0.0
+
+
+def test_trace_determinism():
+    t1 = make_trace(APPS["SN"], kernel=2)
+    t2 = make_trace(APPS["SN"], kernel=2)
+    np.testing.assert_array_equal(t1.addr, t2.addr)
+    assert simulate("ata", t1).ipc == simulate("ata", t2).ipc

@@ -1,0 +1,160 @@
+"""Substrate tests: checkpoint restart, data determinism, optimizer,
+gradient compression, loss machinery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointStore
+from repro.data import DataConfig, make_batch
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_opt_state, schedule)
+from repro.optim.compression import (compress, decompress,
+                                     init_error_buffers)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    store.save(10, tree, wait=True)
+    tree2 = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = store.restore(tree2)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_restart_resume_exact(tmp_path):
+    """Kill/restart semantics: resumed training is bit-identical."""
+    from repro.configs import get_smoke_config
+    from repro.launch.train import train
+    cfg = get_smoke_config("qwen3-0.6b")
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    _, full = train(cfg, steps=8, global_batch=2, seq_len=32,
+                    ckpt_dir=str(d1), ckpt_every=4, log_every=100)
+    # simulate failure at step 4: train to 4, then resume to 8
+    train(cfg, steps=4, global_batch=2, seq_len=32,
+          ckpt_dir=str(d2), ckpt_every=4, log_every=100)
+    _, resumed = train(cfg, steps=8, global_batch=2, seq_len=32,
+                       ckpt_dir=str(d2), ckpt_every=4, log_every=100)
+    assert abs(full[-1] - resumed[-1]) < 1e-5, (full[-1], resumed[-1])
+
+
+def test_checkpoint_elastic_remesh(tmp_path):
+    """A checkpoint written unsharded restores onto a different layout
+    (device_put with new shardings = elastic re-mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    store = CheckpointStore(tmp_path)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    store.save(1, tree, wait=True)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = store.restore(tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = {"w": jnp.ones((2,))}
+    store.save(1, tree, wait=True)
+    # a stale tmp dir from a crashed save must not be visible
+    (tmp_path / ".tmp_step_00000002").mkdir()
+    assert store.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_stateless():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    b1 = make_batch(cfg, 7)
+    b2 = make_batch(cfg, 7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(cfg, 8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_shards_partition_global_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    full = make_batch(cfg, 3)["tokens"]
+    parts = [make_batch(DataConfig(vocab_size=100, seq_len=16,
+                                   global_batch=8, n_shards=4, shard=s),
+                        3)["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    b = make_batch(cfg, 0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}        # d/dw of w^2
+        params, opt, _ = apply_updates(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros((3,))}
+    opt = init_opt_state(params)
+    huge = {"w": jnp.asarray([1e6, 1e6, 1e6])}
+    _, _, metrics = apply_updates(cfg, params, huge, opt)
+    assert float(metrics["grad_norm"]) > 1e5   # reported unclipped
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=4,
+                max_size=64))
+def test_compress_error_feedback_bounded(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    err = jnp.zeros_like(g)
+    q, scale, new_err = compress(g, err)
+    rec = decompress(q, scale)
+    # EF invariant: rec + new_err == g (+ old err) exactly
+    np.testing.assert_allclose(np.asarray(rec + new_err), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(new_err).max()) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_accumulates_small_grads():
+    """Signals smaller than one quantization step still flow through
+    over time thanks to error feedback."""
+    g = jnp.full((8,), 0.001)
+    g = g.at[0].set(1.0)                   # sets scale ~ 1/127
+    err = init_error_buffers({"g": g})["g"]
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, err = compress(g, err)
+        total = total + decompress(q, s)
+    mean_small = float(total[1:].mean()) / 50
+    assert abs(mean_small - 0.001) < 2e-4
