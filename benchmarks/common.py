@@ -1,7 +1,40 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and a memoized
+suite sweep so the figure modules in one ``benchmarks.run`` invocation
+share batched simulation results instead of re-running them."""
 import time
 
 import jax
+
+_SUITE_CACHE = {}
+
+
+def cached_suite(apps=None, archs=None, kernels_per_app=None, rounds=None,
+                 geom=None):
+    """``repro.core.run_suite`` memoized per (app, arch, kernels, rounds,
+    geometry).
+
+    Fig. 8 runs the full suite; Fig. 10 and Table I then reuse its
+    AppResults for their arch subsets rather than simulating again. Each
+    miss sweeps all kernels of the app through ``simulate_batch`` (one
+    compiled call per trace shape).
+    """
+    from repro.core import (APPS, ARCHITECTURES, PAPER_GEOMETRY, run_app)
+    from repro.core.metrics import kernel_range
+    apps = list(apps or APPS)
+    archs = tuple(archs or ARCHITECTURES)
+    geom = geom or PAPER_GEOMETRY
+    out = {}
+    for app in apps:
+        out[app] = {}
+        for arch in archs:
+            key = (app, arch, kernels_per_app, rounds, geom)
+            if key not in _SUITE_CACHE:
+                _SUITE_CACHE[key] = run_app(
+                    app, arch, geom,
+                    kernels=kernel_range(app, kernels_per_app),
+                    rounds=rounds)
+            out[app][arch] = _SUITE_CACHE[key]
+    return out
 
 
 def time_call(fn, *args, reps=3, warmup=1, **kw):

@@ -1,16 +1,21 @@
-"""Fig. 10: L1 access latency vs private cache."""
+"""Fig. 10: L1 access latency vs private cache.
+
+Reuses the Fig. 8 sweep's cached AppResults when run under
+``benchmarks.run`` (same kernels/rounds key), so the figure costs no
+extra simulation.
+"""
 import time
 
 import numpy as np
 
-from repro.core import APPS, run_suite
-from benchmarks.common import emit
+from benchmarks.common import cached_suite, emit
 
 
-def run(kernels_per_app=1):
+def run(kernels_per_app=1, rounds=None):
     t0 = time.perf_counter()
-    suite = run_suite(archs=("private", "decoupled", "ata"),
-                      kernels_per_app=kernels_per_app or None)
+    suite = cached_suite(archs=("private", "decoupled", "ata"),
+                         kernels_per_app=kernels_per_app or None,
+                         rounds=rounds)
     us = (time.perf_counter() - t0) * 1e6
     ratios_d, ratios_a = [], []
     for app, res in suite.items():

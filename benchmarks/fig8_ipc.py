@@ -1,15 +1,19 @@
 """Fig. 8: overall IPC of the four architectures, normalized to the
-private cache, over the ten-app suite."""
+private cache, over the ten-app suite.
+
+All kernels of an app go through ``simulate_batch`` in one compiled
+call; ``rounds`` truncates traces for CI smoke runs.
+"""
 import time
 
-from repro.core import (APPS, HIGH_LOCALITY, LOW_LOCALITY, geomean,
-                        normalized_ipc, run_suite)
-from benchmarks.common import emit
+from repro.core import HIGH_LOCALITY, LOW_LOCALITY, geomean, normalized_ipc
+from benchmarks.common import cached_suite, emit
 
 
-def run(kernels_per_app=1):
+def run(kernels_per_app=1, rounds=None):
     t0 = time.perf_counter()
-    suite = run_suite(kernels_per_app=kernels_per_app or None)
+    suite = cached_suite(kernels_per_app=kernels_per_app or None,
+                         rounds=rounds)
     ipc = normalized_ipc(suite)
     us = (time.perf_counter() - t0) * 1e6
     for app in list(HIGH_LOCALITY) + list(LOW_LOCALITY):

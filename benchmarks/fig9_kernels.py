@@ -1,16 +1,20 @@
-"""Fig. 9: per-kernel IPC for SN, conv3d, HS3D, sradv1."""
+"""Fig. 9: per-kernel IPC for SN, conv3d, HS3D, sradv1.
+
+Each (app, arch) sweeps its kernels through one ``simulate_batch`` call.
+"""
 import time
 
-from repro.core import APPS, normalized_ipc, run_suite
-from benchmarks.common import emit
+from benchmarks.common import cached_suite, emit
 
 FIG9_APPS = ("SN", "conv3d", "HS3D", "sradv1")
 
 
-def run(kernels_per_app=4):
+def run(kernels_per_app=4, rounds=None):
     t0 = time.perf_counter()
-    suite = run_suite(apps=FIG9_APPS, archs=("private", "decoupled", "ata"),
-                      kernels_per_app=kernels_per_app or None)
+    suite = cached_suite(apps=FIG9_APPS,
+                         archs=("private", "decoupled", "ata"),
+                         kernels_per_app=kernels_per_app or None,
+                         rounds=rounds)
     us = (time.perf_counter() - t0) * 1e6
     for app in FIG9_APPS:
         res = suite[app]

@@ -1,18 +1,25 @@
 """Benchmark suite: one module per paper table/figure + kernels +
 serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--rounds N]
 
 --full uses every per-app kernel (Fig. 9 fidelity); default trims for
-CI speed on the 1-core container.
+CI speed on the 1-core container. --rounds truncates every trace (CI
+smoke). The figure sweeps run through ``repro.core.simulate_batch`` —
+all kernels of an app in one vmapped, jitted call — and share results
+via ``benchmarks.common.cached_suite``, so fig10/table1 reuse fig8's
+simulations.
 """
 import argparse
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="truncate every trace to N rounds (CI smoke)")
     args = ap.parse_args()
     k = 0 if args.full else 1
     k9 = 0 if args.full else 3
@@ -20,10 +27,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (fig8_ipc, fig9_kernels, fig10_latency,
                             kernel_micro, serving_ata, table1_landscape)
-    fig8_ipc.run(kernels_per_app=k)
-    fig9_kernels.run(kernels_per_app=k9)
-    fig10_latency.run(kernels_per_app=k)
-    table1_landscape.run(kernels_per_app=k)
+    from benchmarks.common import emit
+    t0 = time.perf_counter()
+    fig8_ipc.run(kernels_per_app=k, rounds=args.rounds)
+    fig9_kernels.run(kernels_per_app=k9, rounds=args.rounds)
+    fig10_latency.run(kernels_per_app=k, rounds=args.rounds)
+    table1_landscape.run(kernels_per_app=k, rounds=args.rounds)
+    emit("sweep.figures_total_s", (time.perf_counter() - t0) * 1e6,
+         f"{time.perf_counter() - t0:.2f}")
     kernel_micro.run()
     serving_ata.run()
 
@@ -32,7 +43,6 @@ def main() -> None:
         from benchmarks import roofline
         rows = roofline.table("sp")
         ok = [r for r in rows if r[2] not in ("SKIP", "ERR")]
-        from benchmarks.common import emit
         for r in ok:
             emit(f"roofline.{r[0]}.{r[1]}.fraction", 0.0, r[7])
         emit("roofline.cells_ok", 0.0, len(ok))

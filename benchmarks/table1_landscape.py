@@ -1,16 +1,20 @@
-"""Table I landscape: hit rate / L2 demand / NoC contention per design."""
+"""Table I landscape: hit rate / L2 demand / NoC contention per design.
+
+Reuses the Fig. 8 sweep's cached AppResults under ``benchmarks.run``.
+"""
 import time
 
 import numpy as np
 
-from repro.core import HIGH_LOCALITY, run_suite
-from benchmarks.common import emit
+from repro.core import HIGH_LOCALITY
+from benchmarks.common import cached_suite, emit
 
 
-def run(kernels_per_app=1):
+def run(kernels_per_app=1, rounds=None):
     t0 = time.perf_counter()
-    suite = run_suite(apps=HIGH_LOCALITY,
-                      kernels_per_app=kernels_per_app or None)
+    suite = cached_suite(apps=HIGH_LOCALITY,
+                         kernels_per_app=kernels_per_app or None,
+                         rounds=rounds)
     us = (time.perf_counter() - t0) * 1e6
     for arch in ("private", "remote", "decoupled", "ata"):
         hr = np.mean([suite[a][arch].l1_hit_rate for a in suite])

@@ -5,6 +5,9 @@ prints normalized IPC + L1 latency vs the paper's claims:
   +12.0% IPC on high-locality apps, no impairment on low-locality,
   decoupled-sharing +67.2% L1 latency vs ATA +6.0%.
 
+Each (app, arch) sweeps all its kernels through ``simulate_batch`` —
+one compiled call per trace shape instead of one jit trace per kernel.
+
 Run:  PYTHONPATH=src python examples/paper_repro.py [--kernels N]
 """
 import argparse

@@ -10,13 +10,23 @@ import numpy as np
 import jax, jax.numpy as jnp
 
 # 1. paper core --------------------------------------------------------------
-from repro.core import APPS, make_trace, simulate
+from repro.core import APPS, make_trace, registered_archs, simulate
 
 trace = make_trace(APPS["b+tree"], kernel=0)
-for arch in ("private", "ata"):
+# the registry (repro.core.arch) holds the paper's four architectures
+# plus extension variants like "ata_bypass"/"ata_fifo"
+print(f"[sim] registered architectures: {registered_archs()}")
+for arch in ("private", "ata", "ata_bypass"):
     r = simulate(arch, trace)
-    print(f"[sim] {arch:8s} IPC={r.ipc:6.2f} l1_hit={r.l1_hit_rate:.2f} "
+    print(f"[sim] {arch:10s} IPC={r.ipc:6.2f} l1_hit={r.l1_hit_rate:.2f} "
           f"remote_hit={r.remote_hit_rate:.2f}")
+
+# sweeps batch: all kernels of an app in one vmapped, jitted call
+from repro.core import simulate_batch
+
+kernel_traces = [make_trace(APPS["b+tree"], kernel=k) for k in range(2)]
+for k, r in enumerate(simulate_batch("ata", kernel_traces)):
+    print(f"[sim] batched kernel {k}: IPC={r.ipc:6.2f}")
 
 # 2. the aggregated tag array as a TPU kernel --------------------------------
 from repro.kernels import ops

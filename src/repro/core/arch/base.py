@@ -1,0 +1,87 @@
+"""Architecture-policy interface for the cache-hierarchy simulator.
+
+The simulator is a pipeline of stages; only the first — the L1 complex —
+differs between contention-mitigation architectures:
+
+    L1 policy stage  ->  shared L2 stage  ->  L1 fill stage  ->  timing
+
+An :class:`ArchPolicy` implements the L1 stage: given the per-round
+request batch and the L1 tag state, it decides which requests are served
+inside the L1 complex, at what latency, with what serial-resource
+occupancy, and where misses fill on return. Everything downstream
+(L2 queueing, DRAM, fill, warp-timing) is policy-independent and lives
+in ``repro.core.simulator``.
+
+New architectures subclass :class:`ArchPolicy`, implement ``l1_stage``,
+and register themselves with :func:`repro.core.arch.register_arch` — no
+core edits required.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core import tagarray
+from repro.core.geometry import GpuGeometry
+from repro.core.tagarray import ReplacementPolicy
+
+#: Cycles to detect an L1 miss (tag check before dispatching onwards).
+TAG_CHECK = 8
+
+
+class RequestBatch(NamedTuple):
+    """One round's flattened requests plus derived routing indices.
+
+    R = n_cores * m requests; G = cluster size.
+    """
+    addr: jnp.ndarray        # (R,) int32 line addresses
+    is_write: jnp.ndarray    # (R,) bool
+    core: jnp.ndarray        # (R,) int32 issuing core
+    cluster: jnp.ndarray     # (R,) int32 cluster of the issuing core
+    self_slot: jnp.ndarray   # (R,) int32 core's slot within its cluster
+    set_idx: jnp.ndarray     # (R,) int32 local L1 set of addr
+    bank: jnp.ndarray        # (R,) int32 local L1 bank of addr
+    peers: jnp.ndarray       # (R, G) int32 cache ids of the whole cluster
+
+    @property
+    def n_requests(self) -> int:
+        return self.addr.shape[0]
+
+
+class L1Outcome(NamedTuple):
+    """What the L1 complex did with the round's requests.
+
+    Every field is (R,) unless noted. ``noc_flits`` is the scalar NoC
+    traffic the policy itself generated (probes, peer transfers);
+    downstream stages add L2/write-back traffic on top.
+    """
+    l1: tagarray.TagState           # post-probe/touch L1 tag state
+    served: jnp.ndarray             # request completed inside L1 complex
+    l1_time: jnp.ndarray            # float32 completion time if served
+    go_l2: jnp.ndarray              # request continues to L2
+    pre_l2: jnp.ndarray             # float32 cycles spent before L2 dispatch
+    occupancy: jnp.ndarray          # float32 serial-resource busy time
+    fill_cache: jnp.ndarray         # int32 tag array to fill on return
+    fill_set: jnp.ndarray           # int32 set to fill on return
+    local_hits: jnp.ndarray         # bool, for hit-rate accounting
+    remote_hits: jnp.ndarray        # bool, served by a peer L1
+    noc_flits: Union[jnp.ndarray, float]  # scalar flit count this round
+    bypass_fill: Optional[jnp.ndarray] = None  # bool; True = skip L1 fill
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchPolicy:
+    """A pluggable L1-complex architecture.
+
+    ``replacement`` selects the victim scheme the policy's tag probes and
+    the shared fill stage use for this architecture's L1 arrays (the L2
+    always runs LRU).
+    """
+    name: str
+    replacement: ReplacementPolicy = ReplacementPolicy.LRU
+
+    def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
+                 reqs: RequestBatch, t: jnp.ndarray) -> L1Outcome:
+        raise NotImplementedError

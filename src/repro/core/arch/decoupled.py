@@ -1,0 +1,57 @@
+"""Decoupled sharing: address-sliced home L1 caches [Ibrahim'20/'21].
+
+Every request — hit or miss — is routed to the home cache its address
+hashes to and pays that home's bank-port queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import tagarray
+from repro.core.arch.base import TAG_CHECK, ArchPolicy, L1Outcome, RequestBatch
+from repro.core.contention import group_rank
+from repro.core.geometry import GpuGeometry
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoupledPolicy(ArchPolicy):
+    name: str = "decoupled"
+
+    def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
+                 reqs: RequestBatch, t) -> L1Outcome:
+        R = reqs.n_requests
+        addr = reqs.addr
+        home = (reqs.cluster * geom.cluster_size
+                + (addr % geom.cluster_size))
+        home_set = ((addr // geom.cluster_size) % geom.l1_sets
+                    ).astype(jnp.int32)
+        home_bank = home_set % geom.l1_banks
+        hit, way, _ = tagarray.probe(l1, home, home_set, addr,
+                                     policy=self.replacement)
+        # every request, hit or miss, pays the home bank-port queue; the
+        # bank is a serial resource, so its busy time is also a
+        # throughput (occupancy) bound warps cannot hide.
+        key = home * geom.l1_banks + home_bank
+        rank, size = group_rank(key, jnp.ones((R,), bool),
+                                geom.n_cores * geom.l1_banks)
+        delay = rank.astype(jnp.float32) * geom.svc_bank
+        occupancy = size.astype(jnp.float32) * geom.svc_bank
+        l1 = tagarray.touch(l1, home, home_set, way, t, hit,
+                            set_dirty=reqs.is_write)
+        return L1Outcome(
+            l1=l1,
+            served=hit,
+            l1_time=jnp.where(hit,
+                              geom.lat_l1 + geom.lat_home + delay,
+                              TAG_CHECK + delay),
+            go_l2=~hit,
+            pre_l2=TAG_CHECK + delay,
+            occupancy=occupancy,
+            fill_cache=home,
+            fill_set=home_set,
+            local_hits=hit,
+            remote_hits=jnp.zeros((R,), bool),
+            noc_flits=jnp.sum(hit) * geom.flits_per_line,
+        )

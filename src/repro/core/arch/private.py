@@ -1,0 +1,36 @@
+"""Baseline architecture: per-core private L1, misses go straight to L2."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import tagarray
+from repro.core.arch.base import TAG_CHECK, ArchPolicy, L1Outcome, RequestBatch
+from repro.core.geometry import GpuGeometry
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivatePolicy(ArchPolicy):
+    name: str = "private"
+
+    def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
+                 reqs: RequestBatch, t) -> L1Outcome:
+        R = reqs.n_requests
+        hit, way, _ = tagarray.probe(l1, reqs.core, reqs.set_idx, reqs.addr,
+                                     policy=self.replacement)
+        l1 = tagarray.touch(l1, reqs.core, reqs.set_idx, way, t, hit,
+                            set_dirty=reqs.is_write)
+        return L1Outcome(
+            l1=l1,
+            served=hit,
+            l1_time=jnp.where(hit, float(geom.lat_l1), float(TAG_CHECK)),
+            go_l2=~hit,
+            pre_l2=jnp.full((R,), float(TAG_CHECK)),
+            occupancy=jnp.zeros((R,), jnp.float32),
+            fill_cache=reqs.core,
+            fill_set=reqs.set_idx,
+            local_hits=hit,
+            remote_hits=jnp.zeros((R,), bool),
+            noc_flits=0.0,
+        )

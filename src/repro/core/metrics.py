@@ -1,4 +1,10 @@
-"""Experiment driver + paper-figure summaries over the simulator."""
+"""Experiment driver + paper-figure summaries over the simulator.
+
+``run_app``/``run_suite`` sweep through :func:`simulate_many`, which
+stacks every same-shape trace of a sweep and runs the batch as one
+vmapped, jitted call — one compilation and one device dispatch per
+(arch, trace-shape) instead of one ``jax.jit`` trace per kernel.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,7 +13,8 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
-from repro.core.simulator import ARCHITECTURES, SimResult, simulate
+from repro.core.simulator import (ARCHITECTURES, SimResult, Trace, simulate,
+                                  simulate_many)
 from repro.core.workloads import APPS, AppParams, make_trace
 
 
@@ -37,27 +44,51 @@ class AppResult:
         return float(sum(r.l2_accesses for r in self.per_kernel))
 
 
+def kernel_range(app: str,
+                 kernels_per_app: Optional[int]) -> Optional[range]:
+    """The kernel subset a ``kernels_per_app`` budget selects for ``app``
+    (None = all kernels). Shared by run_suite and the benchmark cache."""
+    if not kernels_per_app:
+        return None
+    return range(min(kernels_per_app, APPS[app].n_kernels))
+
+
+def app_traces(app: str, geom: GpuGeometry = PAPER_GEOMETRY,
+               kernels: Optional[Iterable[int]] = None,
+               params: Optional[AppParams] = None,
+               rounds: Optional[int] = None) -> List[Trace]:
+    """The per-kernel traces one ``run_app`` call simulates.
+
+    ``rounds`` truncates every kernel (CI smoke runs use this to keep the
+    sweep engine exercised without paying full-trace cost).
+    """
+    p = params if params is not None else APPS[app]
+    if rounds is not None:
+        p = dataclasses.replace(p, rounds=rounds)
+    ks = list(kernels) if kernels is not None else range(p.n_kernels)
+    return [make_trace(p, n_cores=geom.n_cores, kernel=k) for k in ks]
+
+
 def run_app(app: str, arch: str, geom: GpuGeometry = PAPER_GEOMETRY,
             kernels: Optional[Iterable[int]] = None,
-            params: Optional[AppParams] = None) -> AppResult:
-    p = params if params is not None else APPS[app]
-    ks = list(kernels) if kernels is not None else range(p.n_kernels)
-    results = [simulate(arch, make_trace(p, n_cores=geom.n_cores, kernel=k),
-                        geom) for k in ks]
-    return AppResult(app, arch, results)
+            params: Optional[AppParams] = None,
+            rounds: Optional[int] = None) -> AppResult:
+    """All kernels of one app through one architecture — one batched call."""
+    traces = app_traces(app, geom, kernels, params, rounds)
+    return AppResult(app, arch, simulate_many(arch, traces, geom))
 
 
 def run_suite(apps: Optional[Iterable[str]] = None,
               archs: Iterable[str] = ARCHITECTURES,
               geom: GpuGeometry = PAPER_GEOMETRY,
               kernels_per_app: Optional[int] = None,
+              rounds: Optional[int] = None,
               ) -> Dict[str, Dict[str, AppResult]]:
     """{app: {arch: AppResult}} over the benchmark suite."""
     out: Dict[str, Dict[str, AppResult]] = {}
     for app in (apps or APPS):
-        ks = (range(min(kernels_per_app, APPS[app].n_kernels))
-              if kernels_per_app else None)
-        out[app] = {arch: run_app(app, arch, geom, kernels=ks)
+        ks = kernel_range(app, kernels_per_app)
+        out[app] = {arch: run_app(app, arch, geom, kernels=ks, rounds=rounds)
                     for arch in archs}
     return out
 

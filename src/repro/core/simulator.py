@@ -1,8 +1,13 @@
-"""Cache-hierarchy simulator: private / remote-sharing / decoupled / ATA.
+"""Cache-hierarchy simulator: pluggable L1 policies over shared stages.
 
 One ``lax.scan`` step models one *round*: every core issues ``m`` memory
-requests (one coalesced load instruction). Within a round the four
-architectures differ only in routing and contention:
+requests (one coalesced load instruction). A round is a pipeline
+
+    L1 policy stage  ->  shared L2 stage  ->  L1 fill stage  ->  timing
+
+where only the first stage differs between architectures. The policies
+live in ``repro.core.arch`` (one module each) and plug in through a
+registry, so new contention-mitigation schemes need no edits here:
 
   private    : local L1 -> L2
   remote     : local L1 -> broadcast probes to cluster peers (NoC queue +
@@ -13,27 +18,36 @@ architectures differ only in routing and contention:
   ata        : aggregated tag array probed in parallel at zero added
                latency; only *known* remote hits cross the crossbar;
                writes are local-only with dirty-bit L2 diversion  [paper]
+  ata_bypass : ata + CIAO-style interference-aware fill bypass
+  ata_fifo   : ata under FIFO L1 replacement
 
 Latency composition feeds a warp-level hiding model to produce IPC, and
 the L1-complex portion of each request's latency reproduces Fig. 10.
+
+Two entry points: :func:`simulate` runs one trace; :func:`simulate_batch`
+stacks same-shape traces and ``jax.vmap``s the scanned simulation over
+the trace axis, so a whole sweep (all kernels of an app, a parameter
+grid) costs one compilation instead of one ``jax.jit`` trace per kernel.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple
+from typing import Dict, List, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tagarray
+from repro.core.arch import (PAPER_ARCHITECTURES, ArchPolicy, get_arch,
+                             registered_archs)
+from repro.core.arch.base import TAG_CHECK, RequestBatch
 from repro.core.contention import group_rank
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
 
-ARCHITECTURES = ("private", "remote", "decoupled", "ata")
-
-#: Cycles to detect an L1 miss (tag check before dispatching onwards).
-TAG_CHECK = 8
+#: Backwards-compatible alias: the paper's comparison set. The full,
+#: extensible set is ``repro.core.arch.registered_archs()``.
+ARCHITECTURES = PAPER_ARCHITECTURES
 
 
 class Trace(NamedTuple):
@@ -63,10 +77,8 @@ def _l2_state(geom: GpuGeometry) -> tagarray.TagState:
     return tagarray.init_tag_state(geom.l2_parts, geom.l2_sets, geom.l2_ways)
 
 
-def _round(arch: str, geom: GpuGeometry, insn_per_req, state, xs):
-    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write)."""
-    l1, l2, t, stats = state
-    addr, is_write = xs                      # (C, m)
+def _request_batch(geom: GpuGeometry, addr, is_write) -> RequestBatch:
+    """Flatten one round's (C, m) requests and derive routing indices."""
     C, m = addr.shape
     R = C * m
     addr = addr.reshape(R)
@@ -78,131 +90,26 @@ def _round(arch: str, geom: GpuGeometry, insn_per_req, state, xs):
     bank = set_idx % geom.l1_banks
     peers = (cluster[:, None] * geom.cluster_size
              + jnp.arange(geom.cluster_size, dtype=jnp.int32)[None, :])
+    return RequestBatch(addr=addr, is_write=is_write, core=core,
+                        cluster=cluster, self_slot=self_slot,
+                        set_idx=set_idx, bank=bank, peers=peers)
 
-    zero = jnp.zeros((R,), jnp.float32)
-    noc_flits = 0.0
 
-    occupancy = jnp.zeros((R,), jnp.float32)
+def _round(policy: ArchPolicy, geom: GpuGeometry, insn_per_req, state, xs):
+    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write)."""
+    l1, l2, t, stats = state
+    addr, is_write = xs                      # (C, m)
+    C, m = addr.shape
+    reqs = _request_batch(geom, addr, is_write)
+    addr = reqs.addr                         # (R,) flattened
+    R = reqs.n_requests
 
-    if arch == "private":
-        hit, way, _ = tagarray.probe(l1, core, set_idx, addr)
-        served = hit
-        l1_time = jnp.where(hit, float(geom.lat_l1), float(TAG_CHECK))
-        go_l2 = ~hit
-        pre_l2 = jnp.full((R,), float(TAG_CHECK))
-        fill_cache, fill_set = core, set_idx
-        local_hits = hit
-        remote_hits = jnp.zeros((R,), bool)
-        l1 = tagarray.touch(l1, core, set_idx, way, t, hit,
-                            set_dirty=is_write)
-
-    elif arch == "decoupled":
-        home = cluster * geom.cluster_size + (addr % geom.cluster_size)
-        home_set = ((addr // geom.cluster_size) % geom.l1_sets).astype(jnp.int32)
-        home_bank = home_set % geom.l1_banks
-        hit, way, _ = tagarray.probe(l1, home, home_set, addr)
-        # every request, hit or miss, pays the home bank-port queue; the
-        # bank is a serial resource, so its busy time is also a
-        # throughput (occupancy) bound warps cannot hide.
-        key = home * geom.l1_banks + home_bank
-        rank, size = group_rank(key, jnp.ones((R,), bool),
-                                geom.n_cores * geom.l1_banks)
-        delay = rank.astype(jnp.float32) * geom.svc_bank
-        occupancy = size.astype(jnp.float32) * geom.svc_bank
-        served = hit
-        l1_time = jnp.where(hit,
-                            geom.lat_l1 + geom.lat_home + delay,
-                            TAG_CHECK + delay)
-        go_l2 = ~hit
-        pre_l2 = TAG_CHECK + delay
-        fill_cache, fill_set = home, home_set
-        local_hits = hit
-        remote_hits = jnp.zeros((R,), bool)
-        noc_flits = noc_flits + jnp.sum(hit) * geom.flits_per_line
-        l1 = tagarray.touch(l1, home, home_set, way, t, hit,
-                            set_dirty=is_write)
-
-    elif arch == "remote":
-        hit, way, _ = tagarray.probe(l1, core, set_idx, addr)
-        miss = ~hit
-        # broadcast probes: each miss queries all peers; probe service
-        # queue per cluster + NoC load delay sit on the critical path.
-        rank, n_miss = group_rank(cluster, miss, geom.n_clusters)
-        probe_flits = n_miss.astype(jnp.float32) * (geom.cluster_size - 1)
-        noc_delay = probe_flits / geom.noc_bw
-        probe_wait = (geom.lat_probe + rank.astype(jnp.float32)
-                      * geom.svc_probe + noc_delay)
-        rhits, rways, _ = tagarray.probe_many(l1, peers, set_idx, addr)
-        rhits = rhits & (jnp.arange(geom.cluster_size)[None, :]
-                         != self_slot[:, None])
-        remote_hit = miss & rhits.any(axis=-1)
-        src_slot = jnp.argmax(rhits, axis=-1)
-        src_cache = cluster * geom.cluster_size + src_slot
-        prank, psize = group_rank(src_cache, remote_hit, geom.n_cores)
-        xfer = geom.lat_xbar + prank.astype(jnp.float32) * geom.svc_port
-        # every peer cache's tag port serves every probe in the cluster
-        occupancy = jnp.where(
-            miss, n_miss.astype(jnp.float32) * geom.svc_probe, 0.0)
-        occupancy = jnp.maximum(
-            occupancy,
-            jnp.where(remote_hit,
-                      psize.astype(jnp.float32) * geom.svc_port, 0.0))
-        served = hit | remote_hit
-        l1_time = jnp.where(hit, float(geom.lat_l1),
-                            TAG_CHECK + probe_wait
-                            + jnp.where(remote_hit, xfer, 0.0))
-        go_l2 = miss & ~remote_hit
-        pre_l2 = TAG_CHECK + probe_wait          # probes extend L2 path
-        fill_cache, fill_set = core, set_idx
-        local_hits = hit
-        remote_hits = remote_hit
-        noc_flits = (noc_flits + jnp.sum(miss) * (geom.cluster_size - 1)
-                     + jnp.sum(remote_hit) * geom.flits_per_line)
-        l1 = tagarray.touch(l1, core, set_idx, way, t, hit,
-                            set_dirty=is_write)
-
-    elif arch == "ata":
-        # aggregated tag array: all cluster tags compared in parallel,
-        # zero added latency, zero probe traffic.
-        hits, ways, dirt = tagarray.probe_many(l1, peers, set_idx, addr)
-        is_self = (jnp.arange(geom.cluster_size)[None, :]
-                   == self_slot[:, None])
-        local_hit = (hits & is_self).any(axis=-1)
-        way = jnp.where(local_hit,
-                        jnp.take_along_axis(
-                            ways, self_slot[:, None], axis=1)[:, 0],
-                        tagarray.probe(l1, core, set_idx, addr)[1])
-        rmask = hits & ~is_self
-        any_remote = rmask.any(axis=-1)
-        src_slot = jnp.argmax(rmask, axis=-1)
-        src_cache = cluster * geom.cluster_size + src_slot
-        src_dirty = jnp.take_along_axis(dirt, src_slot[:, None],
-                                        axis=1)[:, 0]
-        # writes are local-only (paper coherence rule); dirty remote
-        # copies divert the read to L2.
-        remote_ok = (~is_write) & (~local_hit) & any_remote & (~src_dirty)
-        prank, psize = group_rank(src_cache, remote_ok, geom.n_cores)
-        # only *actual* remote hits occupy the remote data port — the
-        # filtering that is the paper's core contention win.
-        occupancy = jnp.where(
-            remote_ok, psize.astype(jnp.float32) * geom.svc_port, 0.0)
-        served = local_hit | remote_ok
-        l1_time = jnp.where(
-            local_hit, float(geom.lat_l1),
-            jnp.where(remote_ok,
-                      geom.lat_l1 + geom.lat_xbar
-                      + prank.astype(jnp.float32) * geom.svc_port,
-                      float(TAG_CHECK)))
-        go_l2 = ~served
-        pre_l2 = jnp.full((R,), float(TAG_CHECK))
-        fill_cache, fill_set = core, set_idx
-        local_hits = local_hit
-        remote_hits = remote_ok
-        noc_flits = noc_flits + jnp.sum(remote_ok) * geom.flits_per_line
-        l1 = tagarray.touch(l1, core, set_idx, way, t, local_hit,
-                            set_dirty=is_write)
-    else:  # pragma: no cover
-        raise ValueError(f"unknown architecture {arch!r}")
+    # ---- L1 policy stage (the only architecture-specific part) ------------
+    out = policy.l1_stage(geom, l1, reqs, t)
+    l1 = out.l1
+    go_l2 = out.go_l2
+    noc_flits = jnp.asarray(out.noc_flits, jnp.float32)
+    occupancy = out.occupancy
 
     # ---- L2 stage ---------------------------------------------------------
     l2_part = (addr % geom.l2_parts).astype(jnp.int32)
@@ -220,14 +127,17 @@ def _round(arch: str, geom: GpuGeometry, insn_per_req, state, xs):
     noc_flits = noc_flits + jnp.sum(go_l2) * geom.flits_per_line
 
     # ---- L1 fill on L2 return (and on remote fetch: replicate locally) ----
-    fill_mask = go_l2 | remote_hits
-    _, fway, _ = tagarray.probe(l1, fill_cache, fill_set, addr)
-    l1, wb = tagarray.fill(l1, fill_cache, fill_set, fway, addr, t,
-                           fill_mask, dirty=is_write)
+    fill_mask = go_l2 | out.remote_hits
+    if out.bypass_fill is not None:
+        fill_mask = fill_mask & ~out.bypass_fill
+    _, fway, _ = tagarray.probe(l1, out.fill_cache, out.fill_set, addr,
+                                policy=policy.replacement)
+    l1, wb = tagarray.fill(l1, out.fill_cache, out.fill_set, fway, addr, t,
+                           fill_mask, dirty=reqs.is_write)
     noc_flits = noc_flits + jnp.sum(wb) * geom.flits_per_line
 
     # ---- timing ------------------------------------------------------------
-    latency = jnp.where(served, l1_time, pre_l2 + l2_time)     # (R,)
+    latency = jnp.where(out.served, out.l1_time, out.pre_l2 + l2_time)  # (R,)
     # Warp multithreading hides individual request latencies; the core's
     # sustained pace is set by *mean* outstanding latency per load, while
     # serial-resource occupancy is a hard throughput bound (max over m).
@@ -239,16 +149,16 @@ def _round(arch: str, geom: GpuGeometry, insn_per_req, state, xs):
 
     # Fig.10 metric: completion time of the L1 accesses of one load
     # instruction, over loads fully served by the L1 complex.
-    all_served = served.reshape(C, m).all(axis=1)
-    l1_complete = l1_time.reshape(C, m).max(axis=1)
+    all_served = out.served.reshape(C, m).all(axis=1)
+    l1_complete = out.l1_time.reshape(C, m).max(axis=1)
 
     stats = {
         "cycles": stats["cycles"] + round_cost,
         "l1_lat_sum": stats["l1_lat_sum"]
         + jnp.sum(jnp.where(all_served, l1_complete, 0.0)),
         "l1_lat_n": stats["l1_lat_n"] + jnp.sum(all_served),
-        "local_hits": stats["local_hits"] + jnp.sum(local_hits),
-        "remote_hits": stats["remote_hits"] + jnp.sum(remote_hits),
+        "local_hits": stats["local_hits"] + jnp.sum(out.local_hits),
+        "remote_hits": stats["remote_hits"] + jnp.sum(out.remote_hits),
         "requests": stats["requests"] + R,
         "l2_accesses": stats["l2_accesses"] + jnp.sum(go_l2),
         "dram": stats["dram"] + jnp.sum(go_l2 & ~l2_hit),
@@ -265,35 +175,41 @@ def _init_stats(geom: GpuGeometry) -> Dict[str, jnp.ndarray]:
             "dram": z, "noc_flits": z}
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3))
-def _simulate(arch: str, trace_arrays, insn_per_req: float,
-              geom: GpuGeometry):
-    addr, is_write = trace_arrays
+def _sim_core(arch: str, trace_arrays, geom: GpuGeometry):
+    """Scan one trace; insn_per_req is traced so sweeps share one jit."""
+    addr, is_write, insn_per_req = trace_arrays
+    policy = get_arch(arch)
     state = (_l1_state(geom), _l2_state(geom), jnp.int32(0),
              _init_stats(geom))
-    step = functools.partial(_round, arch, geom, insn_per_req)
+    step = functools.partial(_round, policy, geom, insn_per_req)
     (l1, l2, t, stats), _ = jax.lax.scan(step, state, (addr, is_write))
     return stats
 
 
-def simulate(arch: str, trace: Trace,
-             geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
-    """Run a trace through one architecture and summarize."""
-    if arch not in ARCHITECTURES:
-        raise ValueError(f"arch must be one of {ARCHITECTURES}")
-    addr = jnp.asarray(trace.addr, jnp.int32)
-    is_write = jnp.asarray(trace.is_write, bool)
-    stats = jax.device_get(
-        _simulate(arch, (addr, is_write), float(trace.insn_per_req), geom))
-    T, C, m = trace.addr.shape
-    instructions = T * C * m * trace.insn_per_req
+#: One compilation per (arch, trace shape, geometry).
+_simulate = jax.jit(_sim_core, static_argnums=(0, 2))
+
+#: Batched form: vmap over a leading trace axis, still one compilation.
+_simulate_batch = jax.jit(
+    lambda arch, trace_arrays, geom: jax.vmap(
+        lambda ta: _sim_core(arch, ta, geom))(trace_arrays),
+    static_argnums=(0, 2))
+
+
+def _summarize(stats, shape, insn_per_req: float) -> SimResult:
+    T, C, m = shape
+    instructions = T * C * m * insn_per_req
     cycles = float(stats["cycles"].max())
     requests = float(stats["requests"])
     local = float(stats["local_hits"])
     remote = float(stats["remote_hits"])
+    lat_n = float(stats["l1_lat_n"])
     return SimResult(
         ipc=instructions / cycles,
-        l1_latency=float(stats["l1_lat_sum"]) / float(stats["l1_lat_n"]),
+        # NaN when no load was ever fully served inside the L1 complex
+        # (possible on very short or all-streaming traces)
+        l1_latency=(float(stats["l1_lat_sum"]) / lat_n if lat_n
+                    else float("nan")),
         local_hit_rate=local / requests,
         remote_hit_rate=remote / requests,
         l1_hit_rate=(local + remote) / requests,
@@ -303,3 +219,64 @@ def simulate(arch: str, trace: Trace,
         cycles=cycles,
         instructions=instructions,
     )
+
+
+def _check_arch(arch: str) -> None:
+    if arch not in registered_archs():
+        raise ValueError(f"arch must be one of {registered_archs()}")
+
+
+def simulate(arch: str, trace: Trace,
+             geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
+    """Run a trace through one architecture and summarize."""
+    _check_arch(arch)
+    addr = jnp.asarray(trace.addr, jnp.int32)
+    is_write = jnp.asarray(trace.is_write, bool)
+    insn = jnp.float32(trace.insn_per_req)
+    stats = jax.device_get(_simulate(arch, (addr, is_write, insn), geom))
+    return _summarize(stats, trace.addr.shape, trace.insn_per_req)
+
+
+def simulate_batch(arch: str, traces: Sequence[Trace],
+                   geom: GpuGeometry = PAPER_GEOMETRY) -> List[SimResult]:
+    """Run many same-shape traces through one architecture in one call.
+
+    The traces are stacked on a new leading axis and the scanned
+    simulation is ``jax.vmap``-ed over it, so the whole sweep is a single
+    compiled executable (and a single device dispatch) regardless of how
+    many traces are in the batch. All traces must share one (T, C, m)
+    shape; :func:`simulate_many` handles mixed shapes by grouping.
+    """
+    _check_arch(arch)
+    if not traces:
+        return []
+    shapes = {t.addr.shape for t in traces}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"simulate_batch needs same-shape traces, got {sorted(shapes)}; "
+            "use simulate_many for mixed shapes")
+    addr = jnp.asarray(np.stack([t.addr for t in traces]), jnp.int32)
+    is_write = jnp.asarray(np.stack([t.is_write for t in traces]), bool)
+    insn = jnp.asarray([t.insn_per_req for t in traces], jnp.float32)
+    stats = jax.device_get(
+        _simulate_batch(arch, (addr, is_write, insn), geom))
+    shape = next(iter(shapes))
+    return [_summarize(jax.tree.map(lambda a: a[b], stats), shape,
+                       traces[b].insn_per_req)
+            for b in range(len(traces))]
+
+
+def simulate_many(arch: str, traces: Sequence[Trace],
+                  geom: GpuGeometry = PAPER_GEOMETRY) -> List[SimResult]:
+    """``simulate_batch`` over arbitrary traces: group by shape, preserve
+    input order."""
+    _check_arch(arch)
+    groups: Dict[tuple, List[int]] = {}
+    for i, t in enumerate(traces):
+        groups.setdefault(t.addr.shape, []).append(i)
+    out: List[SimResult] = [None] * len(traces)  # type: ignore[list-item]
+    for idxs in groups.values():
+        for i, r in zip(idxs, simulate_batch(
+                arch, [traces[i] for i in idxs], geom)):
+            out[i] = r
+    return out

@@ -1,11 +1,17 @@
-"""Functional (JAX) set-associative tag arrays with timestamp LRU.
+"""Functional (JAX) set-associative tag arrays with pluggable replacement.
 
 State is a dict of arrays so it threads through ``lax.scan`` carries:
 
     tags : (n_arrays, n_sets, n_ways) int32   line address stored per way
     last : (n_arrays, n_sets, n_ways) int32   last-touch timestamp (LRU)
+    born : (n_arrays, n_sets, n_ways) int32   install timestamp (FIFO)
     valid: (n_arrays, n_sets, n_ways) bool
     dirty: (n_arrays, n_sets, n_ways) bool
+
+Victim selection is controlled by :class:`ReplacementPolicy` (LRU, FIFO,
+or deterministic pseudo-random), threaded through ``probe``/``fill`` so
+architecture policies in ``repro.core.arch`` can run the same cache
+organization under different replacement schemes.
 
 All operations are batched over a request vector. ``probe_many`` is the
 pure-jnp form of the paper's *aggregated tag array*: one request compared
@@ -15,6 +21,7 @@ kernel (a test asserts they agree).
 """
 from __future__ import annotations
 
+import enum
 from typing import Dict, Tuple
 
 import jax.numpy as jnp
@@ -22,30 +29,69 @@ import jax.numpy as jnp
 TagState = Dict[str, jnp.ndarray]
 
 
+class ReplacementPolicy(enum.Enum):
+    """Victim-selection scheme for ``probe``/``fill``.
+
+    LRU    — least-recently-*touched* way (timestamp ``last``)
+    FIFO   — oldest-*installed* way (timestamp ``born``); touches do not
+             refresh position
+    RANDOM — deterministic hash of the line address over the valid ways
+             (invalid ways are still preferred, as in real designs)
+    """
+    LRU = "lru"
+    FIFO = "fifo"
+    RANDOM = "random"
+
+
 def init_tag_state(n_arrays: int, n_sets: int, n_ways: int) -> TagState:
     shape = (n_arrays, n_sets, n_ways)
     return {
         "tags": jnp.zeros(shape, jnp.int32),
         "last": jnp.full(shape, -1, jnp.int32),
+        "born": jnp.full(shape, -1, jnp.int32),
         "valid": jnp.zeros(shape, bool),
         "dirty": jnp.zeros(shape, bool),
     }
 
 
+def _select_victim(state: TagState, array_idx, set_idx, addr,
+                   valid: jnp.ndarray,
+                   policy: ReplacementPolicy) -> jnp.ndarray:
+    """Victim way per request; invalid ways always win first."""
+    int_min = jnp.iinfo(jnp.int32).min
+    if policy is ReplacementPolicy.LRU:
+        last = state["last"][array_idx, set_idx]
+        return jnp.argmin(jnp.where(valid, last, int_min), axis=-1)
+    if policy is ReplacementPolicy.FIFO:
+        born = state["born"][array_idx, set_idx]
+        return jnp.argmin(jnp.where(valid, born, int_min), axis=-1)
+    if policy is ReplacementPolicy.RANDOM:
+        n_ways = state["tags"].shape[-1]
+        # Knuth multiplicative hash of the line address: deterministic,
+        # trace-reproducible, uniform over ways.
+        h = addr.astype(jnp.uint32) * jnp.uint32(2654435761)
+        h = (h >> jnp.uint32(16)) ^ h
+        rand_way = (h % jnp.uint32(n_ways)).astype(jnp.int32)
+        first_invalid = jnp.argmin(valid, axis=-1).astype(jnp.int32)
+        return jnp.where(valid.all(axis=-1), rand_way, first_invalid)
+    raise ValueError(f"unknown replacement policy {policy!r}")
+
+
 def probe(state: TagState, array_idx: jnp.ndarray, set_idx: jnp.ndarray,
-          addr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+          addr: jnp.ndarray,
+          policy: ReplacementPolicy = ReplacementPolicy.LRU,
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Look up one (array, set) per request.
 
-    Returns (hit, way, dirty_hit); way is the hit way or the LRU victim.
+    Returns (hit, way, dirty_hit); way is the hit way or the victim the
+    replacement ``policy`` selects.
     """
     tags = state["tags"][array_idx, set_idx]      # (R, W)
     valid = state["valid"][array_idx, set_idx]
-    last = state["last"][array_idx, set_idx]
     match = (tags == addr[:, None]) & valid
     hit = match.any(axis=-1)
     hit_way = jnp.argmax(match, axis=-1)
-    victim = jnp.argmin(jnp.where(valid, last, jnp.iinfo(jnp.int32).min),
-                        axis=-1)
+    victim = _select_victim(state, array_idx, set_idx, addr, valid, policy)
     way = jnp.where(hit, hit_way, victim)
     dirty_hit = (match & state["dirty"][array_idx, set_idx]).any(axis=-1)
     return hit, way, dirty_hit
@@ -100,8 +146,10 @@ def fill(state: TagState, array_idx, set_idx, way, addr, now,
     valid = state["valid"].at[a, s, w].set(
         jnp.where(mask, True, old_valid))
     last = state["last"].at[a, s, w].max(jnp.where(mask, now, -1))
+    born = state["born"].at[a, s, w].set(
+        jnp.where(mask, now, state["born"][a, s, w]))
     new_dirty = jnp.where(mask, dirty if dirty is not None else False,
                           old_dirty)
     dirty_arr = state["dirty"].at[a, s, w].set(new_dirty)
-    return {"tags": tags, "last": last, "valid": valid,
+    return {"tags": tags, "last": last, "born": born, "valid": valid,
             "dirty": dirty_arr}, evicted_dirty

@@ -98,6 +98,24 @@ def _stable_seed(*parts) -> int:
     return zlib.crc32("|".join(str(p) for p in parts).encode()) & 0x7FFFFFFF
 
 
+def _require_int32(addr: np.ndarray) -> np.ndarray:
+    """Narrow int64 addresses to the simulator's int32, refusing to wrap.
+
+    The streaming region grows monotonically from ``_STREAM_BASE``; very
+    long traces (or a bumped ``_STREAM_BASE``) could silently overflow
+    into negative line numbers on ``astype(np.int32)``, corrupting set
+    hashing and region disjointness.
+    """
+    lo, hi = int(addr.min()), int(addr.max())
+    info = np.iinfo(np.int32)
+    if lo < 0 or hi > info.max:
+        raise ValueError(
+            f"trace addresses span [{lo}, {hi}], outside int32 "
+            f"[0, {info.max}]; shrink rounds/working sets or widen the "
+            "simulator address type")
+    return addr.astype(np.int32)
+
+
 def _kernel_params(app: AppParams, kernel: int) -> AppParams:
     """Deterministic per-kernel jitter around the app's parameters."""
     rng = np.random.default_rng(_stable_seed(app.name, kernel))
@@ -160,7 +178,7 @@ def make_trace(app: AppParams, *, n_cores: int = 30, kernel: int = 0,
     addr = np.where(coal, consec, scattered).astype(np.int64)
 
     is_write = rng.random((T, C, m)) < p.write_frac
-    return Trace(addr=addr.astype(np.int32), is_write=is_write,
+    return Trace(addr=_require_int32(addr), is_write=is_write,
                  insn_per_req=p.insn_per_req)
 
 

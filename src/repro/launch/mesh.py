@@ -1,19 +1,16 @@
 """Production mesh construction (TPU v5e pods; host-device dry-run)."""
 from __future__ import annotations
 
-import jax
+from repro.sharding.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (one 256-chip v5e pod) or 2x16x16 (two pods over DCN)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for CPU tests (requires host device count >= product)."""
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=axis_types)
+    return make_mesh((n_data, n_model), ("data", "model"))

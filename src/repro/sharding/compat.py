@@ -1,0 +1,45 @@
+"""Version compatibility shims for the moving ``jax.sharding`` surface.
+
+The repo targets both older jax (0.4.3x: no ``jax.sharding.AxisType``,
+no ``jax.set_mesh``, ``shard_map`` still under ``jax.experimental``) and
+newer releases where those are the blessed spellings. Everything that
+touches mesh construction or global-mesh activation goes through here so
+tests and launch scripts run unchanged on either.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.5-ish
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+#: Whether this jax has explicit axis types on meshes.
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if HAS_AXIS_TYPES:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def activate_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` (new) -> ``jax.sharding.use_mesh`` (mid) -> no-op
+    (old jax, where explicit NamedShardings on every jit boundary carry
+    the mesh and no ambient mesh exists).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext()

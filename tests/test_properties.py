@@ -1,0 +1,111 @@
+"""Hypothesis property tests, collected from across the suite.
+
+They live in their own module so that a missing ``hypothesis`` (the
+optional ``test`` extra) degrades to *these* tests skipping while the
+example-based tests in test_simulator/test_substrate/test_serving keep
+running.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra "
+    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import tagarray
+from repro.core.contention import group_rank
+from repro.optim.compression import compress, decompress
+from repro.serving import hash_blocks
+
+
+# ---------------------------------------------------------------------------
+# group_rank: the one contention primitive
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=40),
+       st.data())
+def test_group_rank_matches_python(keys, data):
+    mask = data.draw(st.lists(st.booleans(), min_size=len(keys),
+                              max_size=len(keys)))
+    k = jnp.asarray(keys, jnp.int32)
+    m = jnp.asarray(mask)
+    rank, size = group_rank(k, m, 8)
+    seen = {}
+    for i, (key, on) in enumerate(zip(keys, mask)):
+        if not on:
+            assert int(rank[i]) == 0 and int(size[i]) == 0
+            continue
+        assert int(rank[i]) == seen.get(key, 0)
+        seen[key] = seen.get(key, 0) + 1
+    for i, (key, on) in enumerate(zip(keys, mask)):
+        if on:
+            assert int(size[i]) == seen[key]
+
+
+# ---------------------------------------------------------------------------
+# LRU tag array vs a pure-python reference cache
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=5, max_size=60))
+def test_tagarray_lru_matches_reference(addrs):
+    n_sets, n_ways = 2, 3
+    state = tagarray.init_tag_state(1, n_sets, n_ways)
+    ref = {s: [] for s in range(n_sets)}     # list of addrs, MRU last
+    for t, a in enumerate(addrs):
+        s = a % n_sets
+        arr = jnp.asarray([a], jnp.int32)
+        si = jnp.asarray([s], jnp.int32)
+        zero = jnp.asarray([0], jnp.int32)
+        hit, way, _ = tagarray.probe(state, zero, si, arr)
+        ref_hit = a in ref[s]
+        assert bool(hit[0]) == ref_hit, (t, a)
+        if ref_hit:
+            state = tagarray.touch(state, zero, si, way,
+                                   jnp.int32(t), jnp.asarray([True]))
+            ref[s].remove(a)
+            ref[s].append(a)
+        else:
+            state, _ = tagarray.fill(state, zero, si, way, arr,
+                                     jnp.int32(t), jnp.asarray([True]))
+            if len(ref[s]) == n_ways:
+                ref[s].pop(0)                 # evict LRU
+            ref[s].append(a)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=4,
+                max_size=64))
+def test_compress_error_feedback_bounded(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    err = jnp.zeros_like(g)
+    q, scale, new_err = compress(g, err)
+    rec = decompress(q, scale)
+    # EF invariant: rec + new_err == g (+ old err) exactly
+    np.testing.assert_allclose(np.asarray(rec + new_err), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(new_err).max()) <= float(scale) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# serving prefix hash
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 999), min_size=32, max_size=96),
+       st.integers(1, 31))
+def test_hash_blocks_prefix_property(tokens, cut):
+    """Equal prefixes hash equally; diverging blocks diverge after."""
+    toks = np.asarray(tokens)
+    block = 16
+    h1 = hash_blocks(toks, block)
+    mod = toks.copy()
+    mod[min(cut, len(mod) - 1)] += 1
+    h2 = hash_blocks(mod, block)
+    cut_block = min(cut, len(mod) - 1) // block
+    np.testing.assert_array_equal(h1[:cut_block], h2[:cut_block])
+    if len(h1) > cut_block:
+        assert (h1[cut_block:] != h2[cut_block:]).all()

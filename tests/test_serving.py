@@ -2,10 +2,9 @@
 domain + hash/property checks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.serving import (AtaCacheConfig, AtaPrefixCache, POLICIES,
-                           hash_blocks, run_workload, synth_requests)
+                           run_workload, synth_requests)
 
 CFG = AtaCacheConfig(n_shards=8)
 
@@ -65,23 +64,6 @@ def test_directory_local_write_rule():
     for s in range(CFG.n_shards):
         n = len(cache.pool_payload[s])
         assert (n > 0) == (s == 3)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(0, 999), min_size=32, max_size=96),
-       st.integers(1, 31))
-def test_hash_blocks_prefix_property(tokens, cut):
-    """Equal prefixes hash equally; diverging blocks diverge after."""
-    toks = np.asarray(tokens)
-    block = 16
-    h1 = hash_blocks(toks, block)
-    mod = toks.copy()
-    mod[min(cut, len(mod) - 1)] += 1
-    h2 = hash_blocks(mod, block)
-    cut_block = min(cut, len(mod) - 1) // block
-    np.testing.assert_array_equal(h1[:cut_block], h2[:cut_block])
-    if len(h1) > cut_block:
-        assert (h1[cut_block:] != h2[cut_block:]).all()
 
 
 def test_kernel_backed_directory_probe_agrees():

@@ -46,12 +46,13 @@ def test_sharded_train_step_runs_on_8_devices():
         from repro.launch import specs as SP
         from repro.launch.mesh import make_test_mesh
         from repro.optim.adamw import AdamWConfig
+        from repro.sharding.compat import activate_mesh
         from repro.sharding.rules import make_rules, rules_context
         from repro.train.step import init_train_state, make_train_step
         cfg = get_smoke_config("qwen3-0.6b")
         mesh = make_test_mesh(4, 2)
         rules = make_rules(cfg, mesh, batch_size=8)
-        with rules_context(mesh, rules), jax.set_mesh(mesh):
+        with rules_context(mesh, rules), activate_mesh(mesh):
             state = init_train_state(jax.random.PRNGKey(0), cfg)
             st_sh = SP.train_state_shardings(
                 jax.eval_shape(lambda: state), cfg, mesh, rules)
@@ -76,6 +77,7 @@ def test_dp_profile_matches_tp_profile_loss():
         from repro.launch import specs as SP
         from repro.launch.mesh import make_test_mesh
         from repro.optim.adamw import AdamWConfig
+        from repro.sharding.compat import activate_mesh
         from repro.sharding.rules import make_rules, rules_context
         from repro.train.step import init_train_state, make_train_step
         cfg = get_smoke_config("qwen3-0.6b")
@@ -83,7 +85,7 @@ def test_dp_profile_matches_tp_profile_loss():
         losses = []
         for profile in ("tp", "dp"):
             rules = make_rules(cfg, mesh, batch_size=8, profile=profile)
-            with rules_context(mesh, rules), jax.set_mesh(mesh):
+            with rules_context(mesh, rules), activate_mesh(mesh):
                 state = init_train_state(jax.random.PRNGKey(0), cfg)
                 st_sh = SP.train_state_shardings(
                     jax.eval_shape(lambda: state), cfg, mesh, rules)
@@ -109,11 +111,11 @@ def test_compressed_allreduce_on_8_devices():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import all_reduce_compressed
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.sharding.compat import make_mesh, shard_map
+        mesh = make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         e = jnp.zeros((8, 64))
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
                  out_specs=(P("data"), P("data")))
         def f(gs, es):
             r, ne = all_reduce_compressed(gs, es, "data")

@@ -1,69 +1,14 @@
-"""Behavioural + property tests for the ATA-Cache simulator core."""
+"""Behavioural tests for the ATA-Cache simulator core (hypothesis
+property tests live in test_properties.py)."""
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (APPS, PAPER_GEOMETRY, AppParams, make_trace,
                         simulate)
-from repro.core.contention import group_rank
 from repro.core import tagarray
-
-
-# ---------------------------------------------------------------------------
-# group_rank: the one contention primitive
-# ---------------------------------------------------------------------------
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.integers(0, 7), min_size=1, max_size=40),
-       st.data())
-def test_group_rank_matches_python(keys, data):
-    mask = data.draw(st.lists(st.booleans(), min_size=len(keys),
-                              max_size=len(keys)))
-    k = jnp.asarray(keys, jnp.int32)
-    m = jnp.asarray(mask)
-    rank, size = group_rank(k, m, 8)
-    seen = {}
-    for i, (key, on) in enumerate(zip(keys, mask)):
-        if not on:
-            assert int(rank[i]) == 0 and int(size[i]) == 0
-            continue
-        assert int(rank[i]) == seen.get(key, 0)
-        seen[key] = seen.get(key, 0) + 1
-    for i, (key, on) in enumerate(zip(keys, mask)):
-        if on:
-            assert int(size[i]) == seen[key]
-
-
-# ---------------------------------------------------------------------------
-# LRU tag array vs a pure-python reference cache
-# ---------------------------------------------------------------------------
-@settings(max_examples=15, deadline=None)
-@given(st.lists(st.integers(0, 30), min_size=5, max_size=60))
-def test_tagarray_lru_matches_reference(addrs):
-    n_sets, n_ways = 2, 3
-    state = tagarray.init_tag_state(1, n_sets, n_ways)
-    ref = {s: [] for s in range(n_sets)}     # list of addrs, MRU last
-    for t, a in enumerate(addrs):
-        s = a % n_sets
-        arr = jnp.asarray([a], jnp.int32)
-        si = jnp.asarray([s], jnp.int32)
-        zero = jnp.asarray([0], jnp.int32)
-        hit, way, _ = tagarray.probe(state, zero, si, arr)
-        ref_hit = a in ref[s]
-        assert bool(hit[0]) == ref_hit, (t, a)
-        if ref_hit:
-            state = tagarray.touch(state, zero, si, way,
-                                   jnp.int32(t), jnp.asarray([True]))
-            ref[s].remove(a)
-            ref[s].append(a)
-        else:
-            state, _ = tagarray.fill(state, zero, si, way, arr,
-                                     jnp.int32(t), jnp.asarray([True]))
-            if len(ref[s]) == n_ways:
-                ref[s].pop(0)                 # evict LRU
-            ref[s].append(a)
 
 
 def test_probe_many_parallel_compare():
