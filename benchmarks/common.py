@@ -1,6 +1,6 @@
 """Shared benchmark utilities: timing, CSV emission, and a memoized
 suite sweep so the figure modules in one ``benchmarks.run`` invocation
-share batched simulation results instead of re-running them."""
+share device-sharded simulation results instead of re-running them."""
 import time
 
 import jax
@@ -8,33 +8,79 @@ import jax
 _SUITE_CACHE = {}
 
 
+def _cache_key(app, arch, kernels_per_app, rounds, geom):
+    return (app, arch, kernels_per_app, rounds, geom)
+
+
 def cached_suite(apps=None, archs=None, kernels_per_app=None, rounds=None,
                  geom=None):
     """``repro.core.run_suite`` memoized per (app, arch, kernels, rounds,
-    geometry).
+    geometry) cell.
 
-    Fig. 8 runs the full suite; Fig. 10 and Table I then reuse its
-    AppResults for their arch subsets rather than simulating again. Each
-    miss sweeps all kernels of the app through ``simulate_batch`` (one
-    compiled call per trace shape).
+    All cells missing from the cache are swept in *one*
+    ``repro.core.sweep.SweepGrid`` run — same-dataflow architectures
+    share an executable, same-shape apps share a dispatch, and the
+    stacked points shard across the host's devices. Fig. 8 runs the full
+    suite; Fig. 10 and Table I then reuse its AppResults for their arch
+    subsets rather than simulating again.
     """
-    from repro.core import (APPS, ARCHITECTURES, PAPER_GEOMETRY, run_app)
-    from repro.core.metrics import kernel_range
+    from repro.core import APPS, ARCHITECTURES, PAPER_GEOMETRY
     apps = list(apps or APPS)
     archs = tuple(archs or ARCHITECTURES)
     geom = geom or PAPER_GEOMETRY
-    out = {}
-    for app in apps:
-        out[app] = {}
-        for arch in archs:
-            key = (app, arch, kernels_per_app, rounds, geom)
-            if key not in _SUITE_CACHE:
-                _SUITE_CACHE[key] = run_app(
-                    app, arch, geom,
-                    kernels=kernel_range(app, kernels_per_app),
-                    rounds=rounds)
-            out[app][arch] = _SUITE_CACHE[key]
-    return out
+    _fill_cache([(app, arch, geom) for app in apps for arch in archs],
+                kernels_per_app, rounds)
+    return {app: {arch: _SUITE_CACHE[_cache_key(app, arch, kernels_per_app,
+                                                rounds, geom)]
+                  for arch in archs}
+            for app in apps}
+
+
+def _fill_cache(cells, kernels_per_app, rounds):
+    """Sweep every (app, arch, geom) cell missing from the cache in one
+    ``repro.core.metrics.sweep_cells`` grid run."""
+    from repro.core.metrics import (AppResult, app_traces, kernel_range,
+                                    sweep_cells)
+    missing = [c for c in dict.fromkeys(cells)
+               if _cache_key(c[0], c[1], kernels_per_app, rounds, c[2])
+               not in _SUITE_CACHE]
+    traces = {}
+    for app, _, geom in missing:
+        # traces depend on the geometry only through n_cores
+        if (app, geom.n_cores) not in traces:
+            traces[(app, geom.n_cores)] = app_traces(
+                app, geom, kernel_range(app, kernels_per_app),
+                rounds=rounds)
+    results = sweep_cells(
+        ((app, arch, geom), arch, geom, traces[(app, geom.n_cores)])
+        for app, arch, geom in missing)
+    for (app, arch, geom), per_kernel in results.items():
+        _SUITE_CACHE[_cache_key(app, arch, kernels_per_app, rounds,
+                                geom)] = AppResult(app, arch, per_kernel)
+
+
+def cached_grid(apps, archs, geoms, kernels_per_app=None, rounds=None):
+    """Geometry-axis variant of :func:`cached_suite`.
+
+    Returns ``{geom_index: {app: {arch: AppResult}}}`` over the full
+    (app x arch x geom) grid, sweeping every missing cell in one
+    ``SweepGrid`` run (geometries differing only in timing scalars share
+    executables; structural variants group per shape).
+    """
+    geoms = list(geoms)
+    apps = list(apps)
+    archs = tuple(archs)
+    _fill_cache([(app, arch, geom) for geom in geoms for app in apps
+                 for arch in archs], kernels_per_app, rounds)
+    return {gi: {app: {arch: _SUITE_CACHE[_cache_key(
+                app, arch, kernels_per_app, rounds, geom)]
+                       for arch in archs}
+                 for app in apps}
+            for gi, geom in enumerate(geoms)}
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
 
 
 def time_call(fn, *args, reps=3, warmup=1, **kw):
@@ -44,7 +90,3 @@ def time_call(fn, *args, reps=3, warmup=1, **kw):
     for _ in range(reps):
         out = jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps * 1e6, out   # us
-
-
-def emit(name, us, derived):
-    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Geometry sensitivity: ATA's IPC win vs private across an L1 grid.
+
+Sweeps three geometry knobs around the paper's Table-II point —
+
+  l1_sets      (structural: regroups per shape)
+  svc_port     (ATA remote-data port service time: traced scalar)
+  cluster_size (structural: aggregation breadth)
+
+— for ``ata`` vs ``private`` over one high-locality app's kernels, all
+through one ``SweepGrid`` run per knob via ``cached_grid``. Scalar-only
+variants (``svc_port``) share a single executable; structural variants
+compile one per shape. Emits the ata/private IPC ratio per grid point.
+"""
+import dataclasses
+import time
+
+from repro.core import PAPER_GEOMETRY
+from benchmarks.common import cached_grid, emit
+
+APP = "cfd"
+ARCHS = ("private", "ata")
+
+#: knob -> swept values (middle value = the paper geometry's own).
+KNOBS = {
+    "l1_sets": (4, 8, 16),
+    "svc_port": (1, 2, 4),
+    "cluster_size": (5, 10, 15),
+}
+
+
+def run(kernels_per_app=1, rounds=None):
+    out = {}
+    for knob, values in KNOBS.items():
+        t0 = time.perf_counter()
+        geoms = [dataclasses.replace(PAPER_GEOMETRY, **{knob: v})
+                 for v in values]
+        grid = cached_grid([APP], ARCHS, geoms,
+                           kernels_per_app=kernels_per_app or None,
+                           rounds=rounds)
+        us = (time.perf_counter() - t0) * 1e6
+        for gi, v in enumerate(values):
+            res = grid[gi][APP]
+            ratio = res["ata"].ipc / res["private"].ipc
+            out[(knob, v)] = ratio
+            emit(f"fig_sweep.{APP}.{knob}={v}.ata_vs_private",
+                 us / len(values), f"{ratio:.3f}")
+    return out

@@ -5,10 +5,13 @@ serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
 --full uses every per-app kernel (Fig. 9 fidelity); default trims for
 CI speed on the 1-core container. --rounds truncates every trace (CI
-smoke). The figure sweeps run through ``repro.core.simulate_batch`` —
-all kernels of an app in one vmapped, jitted call — and share results
-via ``benchmarks.common.cached_suite``, so fig10/table1 reuse fig8's
-simulations.
+smoke). The figure sweeps run through ``repro.core.sweep.SweepGrid`` —
+same-dataflow architectures stacked into shared executables, stacked
+grid points sharded across host devices — and share results via
+``benchmarks.common.cached_suite``, so fig10/table1 reuse fig8's
+simulations. The ``sweep.executables_compiled`` /
+``sweep.figures_total_s`` lines surface sweep-engine perf regressions
+in CI logs.
 """
 import argparse
 import sys
@@ -25,16 +28,24 @@ def main() -> None:
     k9 = 0 if args.full else 3
 
     print("name,us_per_call,derived")
+    import jax
     from benchmarks import (fig8_ipc, fig9_kernels, fig10_latency,
-                            kernel_micro, serving_ata, table1_landscape)
+                            fig_sweep_geometry, kernel_micro, serving_ata,
+                            table1_landscape)
     from benchmarks.common import emit
+    from repro.core import sweep as sweep_engine
     t0 = time.perf_counter()
     fig8_ipc.run(kernels_per_app=k, rounds=args.rounds)
     fig9_kernels.run(kernels_per_app=k9, rounds=args.rounds)
     fig10_latency.run(kernels_per_app=k, rounds=args.rounds)
     table1_landscape.run(kernels_per_app=k, rounds=args.rounds)
-    emit("sweep.figures_total_s", (time.perf_counter() - t0) * 1e6,
-         f"{time.perf_counter() - t0:.2f}")
+    fig_sweep_geometry.run(kernels_per_app=k, rounds=args.rounds)
+    wall = time.perf_counter() - t0
+    # Sweep-engine perf counters: compile count and wall time make
+    # executable-churn regressions visible in CI logs.
+    emit("sweep.figures_total_s", wall * 1e6, f"{wall:.2f}")
+    emit("sweep.executables_compiled", 0.0, sweep_engine.compile_count())
+    emit("sweep.devices", 0.0, len(jax.devices()))
     kernel_micro.run()
     serving_ata.run()
 

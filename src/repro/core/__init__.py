@@ -2,17 +2,21 @@
 
 Public API:
   GpuGeometry, PAPER_GEOMETRY — simulated GPU (paper Table II)
+  GeomStructure, GeomScalars, split_geometry — static/traced geometry split
   simulate, Trace, SimResult  — run one trace through one architecture
   simulate_batch, simulate_many — vmapped sweeps over stacked traces
+  SweepGrid, SweepPoint, SweepReport — device-sharded multi-axis grids
   ARCHITECTURES               — ("private", "remote", "decoupled", "ata")
   ArchPolicy, register_arch, get_arch, registered_archs — policy plug-in
   ReplacementPolicy           — L1 victim selection (LRU / FIFO / RANDOM)
   APPS, make_trace            — calibrated workload suite
   run_app, run_suite, normalized_ipc — experiment drivers
 """
-from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+from repro.core.geometry import (GeomScalars, GeomStructure, GpuGeometry,
+                                 PAPER_GEOMETRY, split_geometry)
 from repro.core.simulator import (ARCHITECTURES, SimResult, Trace, simulate,
                                   simulate_batch, simulate_many)
+from repro.core.sweep import SweepGrid, SweepPoint, SweepReport, SweepRun
 from repro.core.arch import (ArchPolicy, L1Outcome, RequestBatch, get_arch,
                              register_arch, registered_archs)
 from repro.core.tagarray import ReplacementPolicy
@@ -22,8 +26,10 @@ from repro.core.metrics import (AppResult, app_traces, geomean,
                                 normalized_ipc, run_app, run_suite)
 
 __all__ = [
-    "GpuGeometry", "PAPER_GEOMETRY", "ARCHITECTURES", "SimResult", "Trace",
-    "simulate", "simulate_batch", "simulate_many", "ArchPolicy", "L1Outcome",
+    "GpuGeometry", "PAPER_GEOMETRY", "GeomStructure", "GeomScalars",
+    "split_geometry", "ARCHITECTURES", "SimResult", "Trace",
+    "simulate", "simulate_batch", "simulate_many", "SweepGrid", "SweepPoint",
+    "SweepReport", "SweepRun", "ArchPolicy", "L1Outcome",
     "RequestBatch", "get_arch", "register_arch", "registered_archs",
     "ReplacementPolicy", "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
     "make_trace", "AppResult", "app_traces", "geomean", "normalized_ipc",

@@ -21,6 +21,14 @@ from repro.core.geometry import GpuGeometry
 class AtaPolicy(ArchPolicy):
     name: str = "ata"
 
+    @property
+    def stack_key(self) -> str:
+        # The whole ATA family (base, FIFO replacement, CIAO-style
+        # bypass) shares one round dataflow, so sweeps stack the
+        # variants into a single executable behind a traced policy
+        # index.
+        return "ata"
+
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
                  reqs: RequestBatch, t) -> L1Outcome:
         addr, set_idx = reqs.addr, reqs.set_idx
@@ -57,7 +65,7 @@ class AtaPolicy(ArchPolicy):
             l1=l1,
             served=served,
             l1_time=jnp.where(
-                local_hit, float(geom.lat_l1),
+                local_hit, geom.lat_l1 * 1.0,
                 jnp.where(remote_ok,
                           geom.lat_l1 + geom.lat_xbar
                           + prank.astype(jnp.float32) * geom.svc_port,

@@ -82,6 +82,20 @@ class ArchPolicy:
     name: str
     replacement: ReplacementPolicy = ReplacementPolicy.LRU
 
+    @property
+    def stack_key(self) -> str:
+        """Dataflow-group tag for sweep stacking.
+
+        Architectures that return the same ``stack_key`` declare an
+        identical dataflow shape (same tag-state layout, same output
+        pytree per round), so ``repro.core.sweep`` may compile them into
+        one vmapped executable and select the active policy per grid
+        point with a traced index. The default — the policy's own name —
+        opts out of cross-policy stacking; families of variants (e.g.
+        the ATA replacement/bypass variants) override it to share.
+        """
+        return self.name
+
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
                  reqs: RequestBatch, t: jnp.ndarray) -> L1Outcome:
         raise NotImplementedError

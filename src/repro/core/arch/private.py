@@ -24,7 +24,7 @@ class PrivatePolicy(ArchPolicy):
         return L1Outcome(
             l1=l1,
             served=hit,
-            l1_time=jnp.where(hit, float(geom.lat_l1), float(TAG_CHECK)),
+            l1_time=jnp.where(hit, geom.lat_l1 * 1.0, float(TAG_CHECK)),
             go_l2=~hit,
             pre_l2=jnp.full((R,), float(TAG_CHECK)),
             occupancy=jnp.zeros((R,), jnp.float32),

@@ -53,7 +53,7 @@ class RemotePolicy(ArchPolicy):
         return L1Outcome(
             l1=l1,
             served=hit | remote_hit,
-            l1_time=jnp.where(hit, float(geom.lat_l1),
+            l1_time=jnp.where(hit, geom.lat_l1 * 1.0,
                               TAG_CHECK + probe_wait
                               + jnp.where(remote_hit, xfer, 0.0)),
             go_l2=miss & ~remote_hit,

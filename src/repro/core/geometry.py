@@ -8,10 +8,28 @@ The simulated GPU matches the paper's GPGPU-sim v4.0 configuration:
 Service times model *occupancy* (throughput contention); latencies model
 the uncontended critical path. The `hide` divisor models warp-level
 latency hiding (4 GTO schedulers / core, deep multithreading).
+
+For geometry sweeps the fields split into two kinds:
+
+* **structure** fields (core/cluster counts, set/way/bank/partition
+  counts) determine array shapes and routing-index arithmetic — they
+  must be static under ``jax.jit``, and geometries are grouped by them;
+* **scalar** fields (latencies, service times, rates) only enter the
+  timing arithmetic — they are traced, so geometries differing only in
+  scalars share one compiled executable.
+
+:func:`split_geometry` performs the split; :class:`TracedGeometry`
+recombines a static :class:`GeomStructure` with (possibly traced)
+:class:`GeomScalars` behind the same attribute names, so architecture
+policies run unchanged over either a concrete ``GpuGeometry`` or a
+traced view.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,3 +73,87 @@ class GpuGeometry:
 
 #: Default geometry = paper Table II.
 PAPER_GEOMETRY = GpuGeometry()
+
+
+#: Fields that fix array shapes / routing arithmetic (static under jit).
+GEOM_STRUCTURE_FIELDS = ("n_cores", "cluster_size", "l1_sets", "l1_ways",
+                         "l1_banks", "l2_parts", "l2_sets", "l2_ways")
+
+#: Timing fields that only enter arithmetic (traceable under jit).
+GEOM_SCALAR_FIELDS = ("lat_l1", "lat_xbar", "lat_home", "lat_l2",
+                      "lat_dram", "lat_probe", "svc_bank", "svc_port",
+                      "svc_probe", "svc_l2", "flits_per_line", "noc_bw",
+                      "issue_rate", "hide")
+
+
+class GeomStructure(NamedTuple):
+    """The shape-determining subset of :class:`GpuGeometry` (hashable, so
+    it can be a static jit argument; sweeps group geometries by it)."""
+    n_cores: int
+    cluster_size: int
+    l1_sets: int
+    l1_ways: int
+    l1_banks: int
+    l2_parts: int
+    l2_sets: int
+    l2_ways: int
+
+    @property
+    def n_clusters(self) -> int:
+        return self.n_cores // self.cluster_size
+
+
+class GeomScalars(NamedTuple):
+    """The timing subset of :class:`GpuGeometry` as float32 leaves — a
+    pytree, so it can be traced, stacked on a sweep axis, and vmapped."""
+    lat_l1: jnp.ndarray
+    lat_xbar: jnp.ndarray
+    lat_home: jnp.ndarray
+    lat_l2: jnp.ndarray
+    lat_dram: jnp.ndarray
+    lat_probe: jnp.ndarray
+    svc_bank: jnp.ndarray
+    svc_port: jnp.ndarray
+    svc_probe: jnp.ndarray
+    svc_l2: jnp.ndarray
+    flits_per_line: jnp.ndarray
+    noc_bw: jnp.ndarray
+    issue_rate: jnp.ndarray
+    hide: jnp.ndarray
+
+
+def split_geometry(geom: GpuGeometry):
+    """``geom`` -> (static :class:`GeomStructure`, f32 :class:`GeomScalars`)."""
+    structure = GeomStructure(
+        *(getattr(geom, f) for f in GEOM_STRUCTURE_FIELDS))
+    scalars = GeomScalars(
+        *(jnp.float32(getattr(geom, f)) for f in GEOM_SCALAR_FIELDS))
+    return structure, scalars
+
+
+class TracedGeometry:
+    """A ``GpuGeometry`` look-alike over (static structure, traced scalars).
+
+    Architecture policies and the simulator stages read geometry fields
+    by attribute; this view serves structure fields as Python ints (so
+    shapes and ``group_rank`` key counts stay static) and timing fields
+    as float32 values that may be jit tracers (so scalar geometry sweeps
+    share one executable).
+    """
+
+    __slots__ = ("structure", "scalars")
+
+    def __init__(self, structure: GeomStructure, scalars: GeomScalars):
+        object.__setattr__(self, "structure", structure)
+        object.__setattr__(self, "scalars", scalars)
+
+    def __getattr__(self, name: str):
+        if name in GEOM_STRUCTURE_FIELDS:
+            return getattr(self.structure, name)
+        if name in GEOM_SCALAR_FIELDS:
+            return getattr(self.scalars, name)
+        raise AttributeError(name)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.structure.n_clusters

@@ -1,9 +1,12 @@
 """Experiment driver + paper-figure summaries over the simulator.
 
-``run_app``/``run_suite`` sweep through :func:`simulate_many`, which
-stacks every same-shape trace of a sweep and runs the batch as one
-vmapped, jitted call — one compilation and one device dispatch per
-(arch, trace-shape) instead of one ``jax.jit`` trace per kernel.
+``run_app``/``run_suite`` sweep through
+:class:`repro.core.sweep.SweepGrid`: every requested (arch, kernel)
+point of the suite goes into one grid, which stacks same-dataflow
+architectures into shared executables, batches the trace axis, and
+shards the stacked points across the host's devices — one compilation
+per (arch dataflow group, trace shape) instead of one ``jax.jit`` trace
+per kernel, and one device dispatch per bucket.
 """
 from __future__ import annotations
 
@@ -13,9 +16,21 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
-from repro.core.simulator import (ARCHITECTURES, SimResult, Trace, simulate,
-                                  simulate_many)
+from repro.core.simulator import ARCHITECTURES, SimResult, Trace
+from repro.core.sweep import SweepGrid, SweepPoint
 from repro.core.workloads import APPS, AppParams, make_trace
+
+
+def _nanmean(values: Iterable[float]) -> float:
+    """Mean over non-NaN entries; NaN only if *every* entry is NaN.
+
+    ``SimResult.l1_latency`` is documented to be NaN for kernels where
+    no load was ever fully served inside the L1 complex (all-streaming
+    traces); a plain ``np.mean`` would let one such kernel poison the
+    whole app figure.
+    """
+    vals = [v for v in values if not np.isnan(v)]
+    return float(np.mean(vals)) if vals else float("nan")
 
 
 @dataclasses.dataclass
@@ -33,11 +48,11 @@ class AppResult:
 
     @property
     def l1_latency(self) -> float:
-        return float(np.mean([r.l1_latency for r in self.per_kernel]))
+        return _nanmean(r.l1_latency for r in self.per_kernel)
 
     @property
     def l1_hit_rate(self) -> float:
-        return float(np.mean([r.l1_hit_rate for r in self.per_kernel]))
+        return _nanmean(r.l1_hit_rate for r in self.per_kernel)
 
     @property
     def l2_accesses(self) -> float:
@@ -69,13 +84,39 @@ def app_traces(app: str, geom: GpuGeometry = PAPER_GEOMETRY,
     return [make_trace(p, n_cores=geom.n_cores, kernel=k) for k in ks]
 
 
+def sweep_cells(cells: Iterable[tuple]) -> Dict[object, List[SimResult]]:
+    """Sweep many (key, arch, geom, traces) cells in one grid run.
+
+    The shared regrouping seam under :func:`run_suite` and the benchmark
+    caches: every cell's traces become grid points, one
+    :class:`SweepGrid` run sweeps them all (same-dataflow architectures
+    share executables, stacked points shard across devices), and the
+    per-point results regroup into ``{key: [SimResult per trace, in
+    order]}``.
+    """
+    points: List[SweepPoint] = []
+    owners: List[object] = []
+    for key, arch, geom, traces in cells:
+        for tr in traces:
+            points.append(SweepPoint(arch, geom, tr))
+            owners.append(key)
+    if not points:
+        return {}
+    run = SweepGrid.from_points(points).run()
+    out: Dict[object, List[SimResult]] = {}
+    for key, r in zip(owners, run.results):
+        out.setdefault(key, []).append(r)
+    return out
+
+
 def run_app(app: str, arch: str, geom: GpuGeometry = PAPER_GEOMETRY,
             kernels: Optional[Iterable[int]] = None,
             params: Optional[AppParams] = None,
             rounds: Optional[int] = None) -> AppResult:
-    """All kernels of one app through one architecture — one batched call."""
+    """All kernels of one app through one architecture — one grid run."""
     traces = app_traces(app, geom, kernels, params, rounds)
-    return AppResult(app, arch, simulate_many(arch, traces, geom))
+    return AppResult(app, arch,
+                     SweepGrid([arch], [geom], traces).run().results)
 
 
 def run_suite(apps: Optional[Iterable[str]] = None,
@@ -84,13 +125,22 @@ def run_suite(apps: Optional[Iterable[str]] = None,
               kernels_per_app: Optional[int] = None,
               rounds: Optional[int] = None,
               ) -> Dict[str, Dict[str, AppResult]]:
-    """{app: {arch: AppResult}} over the benchmark suite."""
-    out: Dict[str, Dict[str, AppResult]] = {}
-    for app in (apps or APPS):
-        ks = kernel_range(app, kernels_per_app)
-        out[app] = {arch: run_app(app, arch, geom, kernels=ks, rounds=rounds)
-                    for arch in archs}
-    return out
+    """{app: {arch: AppResult}} over the benchmark suite.
+
+    The whole (app-kernel x arch) product goes into *one*
+    :class:`SweepGrid` run via :func:`sweep_cells`.
+    """
+    apps = list(apps or APPS)
+    archs = tuple(archs)
+    traces = {app: app_traces(app, geom,
+                              kernel_range(app, kernels_per_app),
+                              rounds=rounds)
+              for app in apps}
+    results = sweep_cells(((app, arch), arch, geom, traces[app])
+                          for app in apps for arch in archs)
+    return {app: {arch: AppResult(app, arch, results[(app, arch)])
+                  for arch in archs}
+            for app in apps}
 
 
 def normalized_ipc(suite: Dict[str, Dict[str, AppResult]],
@@ -100,5 +150,16 @@ def normalized_ipc(suite: Dict[str, Dict[str, AppResult]],
 
 
 def geomean(xs: Iterable[float]) -> float:
-    xs = list(xs)
-    return float(np.exp(np.mean(np.log(xs))))
+    """Geometric mean; rejects NaN/inf/non-positive inputs loudly.
+
+    A single NaN (e.g. a latency ratio built from an all-streaming
+    kernel) or a non-positive value would otherwise propagate a silent
+    NaN into headline figure numbers.
+    """
+    arr = np.asarray(list(xs), dtype=float)
+    if arr.size == 0:
+        raise ValueError("geomean of an empty sequence")
+    if not np.all(np.isfinite(arr)) or np.any(arr <= 0):
+        raise ValueError(
+            f"geomean needs finite positive inputs, got {arr.tolist()}")
+    return float(np.exp(np.mean(np.log(arr))))

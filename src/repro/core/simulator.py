@@ -24,15 +24,24 @@ registry, so new contention-mitigation schemes need no edits here:
 Latency composition feeds a warp-level hiding model to produce IPC, and
 the L1-complex portion of each request's latency reproduces Fig. 10.
 
-Two entry points: :func:`simulate` runs one trace; :func:`simulate_batch`
+Entry points: :func:`simulate` runs one trace; :func:`simulate_batch`
 stacks same-shape traces and ``jax.vmap``s the scanned simulation over
 the trace axis, so a whole sweep (all kernels of an app, a parameter
-grid) costs one compilation instead of one ``jax.jit`` trace per kernel.
+grid) costs one compilation instead of one ``jax.jit`` trace per kernel;
+``repro.core.sweep.SweepGrid`` builds on the same core to batch the
+*architecture* and *geometry* axes too and shard the stacked axis over
+devices.
+
+Geometry timing scalars are traced (``GeomScalars``), and a *group* of
+same-dataflow architectures is compiled into one executable with the
+active policy selected by a traced index (``lax.switch`` over the
+per-round step), so an executable is keyed only by
+(arch dataflow group, trace shape, geometry structure).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, NamedTuple, Sequence
+from typing import Dict, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +52,8 @@ from repro.core.arch import (PAPER_ARCHITECTURES, ArchPolicy, get_arch,
                              registered_archs)
 from repro.core.arch.base import TAG_CHECK, RequestBatch
 from repro.core.contention import group_rank
-from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
+                                 TracedGeometry, split_geometry)
 
 #: Backwards-compatible alias: the paper's comparison set. The full,
 #: extensible set is ``repro.core.arch.registered_archs()``.
@@ -69,15 +79,15 @@ class SimResult(NamedTuple):
     instructions: float
 
 
-def _l1_state(geom: GpuGeometry) -> tagarray.TagState:
+def _l1_state(geom) -> tagarray.TagState:
     return tagarray.init_tag_state(geom.n_cores, geom.l1_sets, geom.l1_ways)
 
 
-def _l2_state(geom: GpuGeometry) -> tagarray.TagState:
+def _l2_state(geom) -> tagarray.TagState:
     return tagarray.init_tag_state(geom.l2_parts, geom.l2_sets, geom.l2_ways)
 
 
-def _request_batch(geom: GpuGeometry, addr, is_write) -> RequestBatch:
+def _request_batch(geom, addr, is_write) -> RequestBatch:
     """Flatten one round's (C, m) requests and derive routing indices."""
     C, m = addr.shape
     R = C * m
@@ -95,8 +105,13 @@ def _request_batch(geom: GpuGeometry, addr, is_write) -> RequestBatch:
                         set_idx=set_idx, bank=bank, peers=peers)
 
 
-def _round(policy: ArchPolicy, geom: GpuGeometry, insn_per_req, state, xs):
-    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write)."""
+def _round(policy: ArchPolicy, geom, insn_per_req, state, xs):
+    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write).
+
+    ``geom`` is a :class:`TracedGeometry` view (or a concrete
+    ``GpuGeometry``): structure fields are static, timing scalars may be
+    tracers.
+    """
     l1, l2, t, stats = state
     addr, is_write = xs                      # (C, m)
     C, m = addr.shape
@@ -117,7 +132,7 @@ def _round(policy: ArchPolicy, geom: GpuGeometry, insn_per_req, state, xs):
     l2_hit, l2_way, _ = tagarray.probe(l2, l2_part, l2_set, addr)
     l2_rank, l2_size = group_rank(l2_part, go_l2, geom.l2_parts)
     l2_time = (geom.lat_l2 + l2_rank.astype(jnp.float32) * geom.svc_l2
-               + jnp.where(l2_hit, 0.0, float(geom.lat_dram)))
+               + jnp.where(l2_hit, 0.0, geom.lat_dram * 1.0))
     occupancy = jnp.maximum(
         occupancy,
         jnp.where(go_l2, l2_size.astype(jnp.float32) * geom.svc_l2, 0.0))
@@ -167,7 +182,7 @@ def _round(policy: ArchPolicy, geom: GpuGeometry, insn_per_req, state, xs):
     return (l1, l2, t + 1, stats), None
 
 
-def _init_stats(geom: GpuGeometry) -> Dict[str, jnp.ndarray]:
+def _init_stats(geom) -> Dict[str, jnp.ndarray]:
     z = jnp.float32(0.0)
     return {"cycles": jnp.zeros((geom.n_cores,), jnp.float32),
             "l1_lat_sum": z, "l1_lat_n": z, "local_hits": z,
@@ -175,25 +190,47 @@ def _init_stats(geom: GpuGeometry) -> Dict[str, jnp.ndarray]:
             "dram": z, "noc_flits": z}
 
 
-def _sim_core(arch: str, trace_arrays, geom: GpuGeometry):
-    """Scan one trace; insn_per_req is traced so sweeps share one jit."""
-    addr, is_write, insn_per_req = trace_arrays
-    policy = get_arch(arch)
+def _sim_core(archs: Tuple[str, ...], point_arrays,
+              structure: GeomStructure):
+    """Scan one grid point through the round pipeline.
+
+    ``archs`` is a *dataflow group*: one or more same-dataflow
+    architectures compiled together, the active one selected per point
+    by the traced ``policy_idx`` (``lax.switch`` over the round step).
+    ``point_arrays = (addr, is_write, insn_per_req, scalars,
+    policy_idx)`` — everything but ``archs``/``structure`` is traced, so
+    one executable serves whole (policy, timing-geometry, trace) grids.
+    """
+    addr, is_write, insn_per_req, scalars, policy_idx = point_arrays
+    geom = TracedGeometry(structure, scalars)
     state = (_l1_state(geom), _l2_state(geom), jnp.int32(0),
              _init_stats(geom))
-    step = functools.partial(_round, policy, geom, insn_per_req)
+    steps = [functools.partial(_round, get_arch(a), geom, insn_per_req)
+             for a in archs]
+    if len(steps) == 1:
+        step = steps[0]
+    else:
+        def step(carry, xs):
+            return jax.lax.switch(policy_idx, steps, carry, xs)
     (l1, l2, t, stats), _ = jax.lax.scan(step, state, (addr, is_write))
     return stats
 
 
-#: One compilation per (arch, trace shape, geometry).
+#: One compilation per (arch group, trace shape, geometry structure).
 _simulate = jax.jit(_sim_core, static_argnums=(0, 2))
 
-#: Batched form: vmap over a leading trace axis, still one compilation.
+#: Batched form: vmap over a leading grid-point axis, still one
+#: compilation. ``repro.core.sweep`` adds device sharding on top.
 _simulate_batch = jax.jit(
-    lambda arch, trace_arrays, geom: jax.vmap(
-        lambda ta: _sim_core(arch, ta, geom))(trace_arrays),
+    lambda archs, point_arrays, structure: jax.vmap(
+        lambda pa: _sim_core(archs, pa, structure))(point_arrays),
     static_argnums=(0, 2))
+
+
+def _point_arrays(trace_like, scalars, policy_idx=0):
+    """Pack one grid point's traced leaves for :func:`_sim_core`."""
+    addr, is_write, insn = trace_like
+    return (addr, is_write, insn, scalars, jnp.int32(policy_idx))
 
 
 def _summarize(stats, shape, insn_per_req: float) -> SimResult:
@@ -230,10 +267,12 @@ def simulate(arch: str, trace: Trace,
              geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
     """Run a trace through one architecture and summarize."""
     _check_arch(arch)
+    structure, scalars = split_geometry(geom)
     addr = jnp.asarray(trace.addr, jnp.int32)
     is_write = jnp.asarray(trace.is_write, bool)
     insn = jnp.float32(trace.insn_per_req)
-    stats = jax.device_get(_simulate(arch, (addr, is_write, insn), geom))
+    stats = jax.device_get(_simulate(
+        (arch,), _point_arrays((addr, is_write, insn), scalars), structure))
     return _summarize(stats, trace.addr.shape, trace.insn_per_req)
 
 
@@ -255,11 +294,15 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
         raise ValueError(
             f"simulate_batch needs same-shape traces, got {sorted(shapes)}; "
             "use simulate_many for mixed shapes")
+    structure, scalars = split_geometry(geom)
+    B = len(traces)
     addr = jnp.asarray(np.stack([t.addr for t in traces]), jnp.int32)
     is_write = jnp.asarray(np.stack([t.is_write for t in traces]), bool)
     insn = jnp.asarray([t.insn_per_req for t in traces], jnp.float32)
-    stats = jax.device_get(
-        _simulate_batch(arch, (addr, is_write, insn), geom))
+    batched = ((addr, is_write, insn,
+                jax.tree.map(lambda s: jnp.broadcast_to(s, (B,)), scalars),
+                jnp.zeros((B,), jnp.int32)))
+    stats = jax.device_get(_simulate_batch((arch,), batched, structure))
     shape = next(iter(shapes))
     return [_summarize(jax.tree.map(lambda a: a[b], stats), shape,
                        traces[b].insn_per_req)

@@ -1,0 +1,233 @@
+"""Device-sharded, multi-axis parameter-grid sweep engine.
+
+:class:`SweepGrid` takes a cartesian grid over three axes —
+
+    archs   : architecture-policy names (``repro.core.arch`` registry)
+    geoms   : :class:`GpuGeometry` points
+    traces  : :class:`Trace` points (e.g. all kernels of an app)
+
+— and runs every point through the round-pipeline simulator while
+compiling as few executables as possible:
+
+* **policy stacking** — architectures whose policies share a
+  ``stack_key`` (identical round dataflow, e.g. ``ata``/``ata_fifo``/
+  ``ata_bypass``) are compiled into *one* executable; the active policy
+  is selected per grid point by a traced index (``lax.switch`` inside
+  the scanned round). Note the tradeoff: under ``vmap`` a batched
+  switch index lowers to *compute-all-branches-and-select*, so a
+  stacked bucket pays roughly group-size x the per-round FLOPs in
+  exchange for one compilation and one dispatch — a good trade while
+  compile time dominates (small grids, wide families, CI smoke) but
+  worth splitting into per-policy grids when a single stacked bucket
+  grows runtime-bound.
+* **geometry batching** — timing scalars (latencies, service times,
+  rates) are traced (:class:`repro.core.geometry.GeomScalars`), so
+  geometries that differ only in scalars share an executable; structure
+  fields (core/set/way counts) fix array shapes and group points.
+* **device sharding** — each execution bucket's stacked point axis is
+  padded to the device count and sharded with
+  ``repro.sharding.compat.shard_map``, so an N-device host runs N grid
+  points at a time per dispatch.
+
+An executable is therefore keyed by (arch dataflow group, geometry
+structure, trace shape, padded batch size, device count); everything
+else — policy choice, timing scalars, addresses, instruction mix — is
+data. Results are bit-identical to running :func:`repro.core.simulate`
+per point (a tier-1 test asserts this), so figures can move freely
+between the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
+                                 split_geometry)
+from repro.core.simulator import (SimResult, Trace, _check_arch, _sim_core,
+                                  _summarize)
+from repro.core.arch import get_arch
+from repro.sharding.compat import make_mesh_1d, shard_map
+from jax.sharding import PartitionSpec as P
+
+
+class SweepPoint(NamedTuple):
+    """One (arch, geometry, trace) grid point."""
+    arch: str
+    geom: GpuGeometry
+    trace: Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepReport:
+    """Execution accounting for one :meth:`SweepGrid.run`.
+
+    ``n_executables`` counts the distinct compiled programs the run
+    dispatched to; ``n_compiles`` counts how many of those were built
+    fresh this run (the rest were warm in the process-wide cache).
+    """
+    n_points: int
+    n_executables: int
+    n_compiles: int
+    n_devices: int
+    wall_s: float
+
+
+class SweepRun(NamedTuple):
+    results: List[SimResult]     # aligned with SweepGrid.points
+    report: SweepReport
+
+
+#: Process-wide set of executable keys already compiled, for compile
+#: accounting (jit itself also caches; this mirrors its keying).
+_COMPILED_KEYS: set = set()
+
+#: Memoized sharded callables per (group, structure, n_devices).
+_EXEC_MEMO: Dict[tuple, object] = {}
+
+
+def compile_count() -> int:
+    """Total sweep executables compiled by this process so far."""
+    return len(_COMPILED_KEYS)
+
+
+def _sharded_executable(group: Tuple[str, ...], structure: GeomStructure,
+                        n_devices: int):
+    """The jitted, device-sharded, vmapped simulator for one bucket."""
+    key = (group, structure, n_devices)
+    fn = _EXEC_MEMO.get(key)
+    if fn is None:
+        mesh = make_mesh_1d(n_devices, "grid")
+
+        def local_batch(point_arrays):
+            return jax.vmap(
+                lambda pa: _sim_core(group, pa, structure))(point_arrays)
+
+        fn = jax.jit(shard_map(local_batch, mesh=mesh,
+                               in_specs=P("grid"), out_specs=P("grid")))
+        _EXEC_MEMO[key] = fn
+    return fn
+
+
+def _validate_geom(geom: GpuGeometry) -> None:
+    if geom.n_cores % geom.cluster_size:
+        raise ValueError(
+            f"cluster_size={geom.cluster_size} must divide "
+            f"n_cores={geom.n_cores}")
+
+
+class SweepGrid:
+    """A cartesian (arch x geometry x trace) grid and its sweep engine.
+
+    ``SweepGrid(archs, geoms, traces)`` enumerates the full product with
+    the trace axis fastest and the arch axis slowest;
+    :meth:`from_points` accepts an arbitrary point list instead (the
+    engine re-buckets internally either way). :meth:`run` returns the
+    per-point :class:`SimResult` list aligned with :attr:`points`, plus
+    a :class:`SweepReport`.
+    """
+
+    def __init__(self, archs: Sequence[str],
+                 geoms: Optional[Sequence[GpuGeometry]] = None,
+                 traces: Sequence[Trace] = ()):
+        geoms = list(geoms) if geoms is not None else [PAPER_GEOMETRY]
+        traces = list(traces)   # tolerate one-shot iterables
+        self.points: List[SweepPoint] = [
+            SweepPoint(a, g, t)
+            for a in archs for g in geoms for t in traces]
+        self._validate()
+
+    @classmethod
+    def from_points(cls, points: Iterable[SweepPoint]) -> "SweepGrid":
+        grid = cls.__new__(cls)
+        grid.points = [SweepPoint(*p) for p in points]
+        grid._validate()
+        return grid
+
+    def _validate(self) -> None:
+        for arch in {p.arch for p in self.points}:
+            _check_arch(arch)
+        seen = set()
+        for p in self.points:
+            if id(p.geom) not in seen:
+                seen.add(id(p.geom))
+                _validate_geom(p.geom)
+
+    def run(self, n_devices: Optional[int] = None) -> SweepRun:
+        """Sweep every grid point; one sharded dispatch per bucket."""
+        t0 = time.perf_counter()
+        avail = len(jax.devices())
+        D = max(1, min(n_devices or avail, avail))
+
+        # Dataflow groups, ordered by first appearance of each arch.
+        group_of: Dict[str, Tuple[str, ...]] = {}
+        by_key: Dict[str, List[str]] = {}
+        for p in self.points:
+            if p.arch not in group_of:
+                by_key.setdefault(get_arch(p.arch).stack_key,
+                                  []).append(p.arch)
+                group_of[p.arch] = ()   # placeholder
+        for archs in by_key.values():
+            group = tuple(archs)
+            for a in archs:
+                group_of[a] = group
+
+        # One geometry split per *unique* geometry, not per point: each
+        # split commits 14 scalars to device.
+        splits: Dict[GpuGeometry, tuple] = {}
+
+        def split(geom):
+            if geom not in splits:
+                splits[geom] = split_geometry(geom)
+            return splits[geom]
+
+        # Execution buckets: (group, structure, trace shape).
+        buckets: Dict[tuple, List[int]] = {}
+        for i, p in enumerate(self.points):
+            key = (group_of[p.arch], split(p.geom)[0], p.trace.addr.shape)
+            buckets.setdefault(key, []).append(i)
+
+        results: List[Optional[SimResult]] = [None] * len(self.points)
+        used_execs: set = set()
+        new_compiles = 0
+        for (group, structure, shape), idxs in buckets.items():
+            B = len(idxs)
+            pad = (-B) % D
+            rows = idxs + [idxs[-1]] * pad          # repeat last point
+            pts = [self.points[i] for i in rows]
+            addr = jnp.asarray(np.stack([p.trace.addr for p in pts]),
+                               jnp.int32)
+            is_write = jnp.asarray(
+                np.stack([p.trace.is_write for p in pts]), bool)
+            insn = jnp.asarray([p.trace.insn_per_req for p in pts],
+                               jnp.float32)
+            scalars = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[split(p.geom)[1] for p in pts])
+            policy_idx = jnp.asarray(
+                [group.index(p.arch) for p in pts], jnp.int32)
+            exec_key = (group, structure, shape, B + pad, D)
+            used_execs.add(exec_key)
+            if exec_key not in _COMPILED_KEYS:
+                _COMPILED_KEYS.add(exec_key)
+                new_compiles += 1
+            fn = _sharded_executable(group, structure, D)
+            stats = jax.device_get(
+                fn((addr, is_write, insn, scalars, policy_idx)))
+            for b, i in enumerate(idxs):
+                results[i] = _summarize(
+                    jax.tree.map(lambda a: a[b], stats), shape,
+                    self.points[i].trace.insn_per_req)
+
+        report = SweepReport(
+            n_points=len(self.points),
+            n_executables=len(used_execs),
+            n_compiles=new_compiles,
+            n_devices=D,
+            wall_s=time.perf_counter() - t0,
+        )
+        return SweepRun(results=results, report=report)  # type: ignore

@@ -18,6 +18,17 @@ pure-jnp form of the paper's *aggregated tag array*: one request compared
 against the tag arrays of every cache in its cluster in parallel — the
 same computation `repro.kernels.ata_tag_probe` implements as a Pallas TPU
 kernel (a test asserts they agree).
+
+Scatter-mask convention: mutating ops (``touch``/``fill``) route
+masked-*out* requests to an out-of-bounds array index and scatter with
+``mode="drop"``, so they touch no entry at all. (They must *not* be
+parked at a valid index like ``(0, 0, 0)`` and scatter their old value
+back: XLA resolves duplicate scatter indices last-writer-wins, so a
+parked no-op landing after a genuine update to array 0 / set 0 / way 0
+would revert it — e.g. a core-0 fill undone, a dirty bit lost, a missed
+write-back.) Within the masked-*in* requests, duplicate
+(array, set, way) targets still resolve last-writer-wins, matching a
+single-ported fill path.
 """
 from __future__ import annotations
 
@@ -113,17 +124,25 @@ def probe_many(state: TagState, arrays: jnp.ndarray, set_idx: jnp.ndarray,
     return hits, ways, dirty
 
 
+def _drop_unmasked(state: TagState, array_idx, mask) -> jnp.ndarray:
+    """Scatter array index that routes masked-out requests out of bounds.
+
+    Combined with ``mode="drop"`` the scatter then skips them entirely —
+    see the scatter-mask convention in the module docstring.
+    """
+    return jnp.where(mask, array_idx, state["tags"].shape[0])
+
+
 def touch(state: TagState, array_idx, set_idx, way, now,
           mask, *, set_dirty=None) -> TagState:
     """Refresh LRU timestamp (and optionally dirty) for masked requests."""
-    a = jnp.where(mask, array_idx, 0)
-    s = jnp.where(mask, set_idx, 0)
-    w = jnp.where(mask, way, 0)
-    last = state["last"].at[a, s, w].max(jnp.where(mask, now, -1))
+    a = _drop_unmasked(state, array_idx, mask)
+    last = state["last"].at[a, set_idx, way].max(now, mode="drop")
     out = dict(state, last=last)
     if set_dirty is not None:
-        out["dirty"] = state["dirty"].at[a, s, w].set(
-            jnp.where(mask & set_dirty, True, state["dirty"][a, s, w]))
+        ad = _drop_unmasked(state, array_idx, mask & set_dirty)
+        out["dirty"] = state["dirty"].at[ad, set_idx, way].set(
+            True, mode="drop")
     return out
 
 
@@ -131,25 +150,24 @@ def fill(state: TagState, array_idx, set_idx, way, addr, now,
          mask, *, dirty=None) -> Tuple[TagState, jnp.ndarray]:
     """Install lines for masked requests; returns (state, evicted_dirty).
 
-    Duplicate (array,set,way) targets resolve last-writer-wins, matching a
+    Masked-out requests are dropped (see the scatter-mask convention in
+    the module docstring); within the masked-in set, duplicate
+    (array,set,way) targets resolve last-writer-wins, matching a
     single-ported fill path. ``evicted_dirty`` flags write-back traffic.
     """
-    a = jnp.where(mask, array_idx, 0)
-    s = jnp.where(mask, set_idx, 0)
-    w = jnp.where(mask, way, 0)
-    old_valid = state["valid"][a, s, w]
-    old_dirty = state["dirty"][a, s, w]
+    a = _drop_unmasked(state, array_idx, mask)
+    # Reads use the caller's (always in-bounds) indices; the results are
+    # masked, so masked-out lanes never contribute.
+    old_valid = state["valid"][array_idx, set_idx, way]
+    old_dirty = state["dirty"][array_idx, set_idx, way]
     evicted_dirty = mask & old_valid & old_dirty
 
-    tags = state["tags"].at[a, s, w].set(
-        jnp.where(mask, addr, state["tags"][a, s, w]))
-    valid = state["valid"].at[a, s, w].set(
-        jnp.where(mask, True, old_valid))
-    last = state["last"].at[a, s, w].max(jnp.where(mask, now, -1))
-    born = state["born"].at[a, s, w].set(
-        jnp.where(mask, now, state["born"][a, s, w]))
-    new_dirty = jnp.where(mask, dirty if dirty is not None else False,
-                          old_dirty)
-    dirty_arr = state["dirty"].at[a, s, w].set(new_dirty)
+    tags = state["tags"].at[a, set_idx, way].set(addr, mode="drop")
+    valid = state["valid"].at[a, set_idx, way].set(True, mode="drop")
+    last = state["last"].at[a, set_idx, way].max(now, mode="drop")
+    born = state["born"].at[a, set_idx, way].set(now, mode="drop")
+    new_dirty = dirty if dirty is not None else jnp.zeros_like(mask)
+    dirty_arr = state["dirty"].at[a, set_idx, way].set(new_dirty,
+                                                       mode="drop")
     return {"tags": tags, "last": last, "born": born, "valid": valid,
             "dirty": dirty_arr}, evicted_dirty

@@ -12,6 +12,7 @@ import contextlib
 from typing import Sequence
 
 import jax
+import numpy as np
 
 try:  # jax >= 0.5-ish
     from jax import shard_map  # type: ignore[attr-defined]
@@ -29,6 +30,22 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
         return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
                              axis_types=axis_types)
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def make_mesh_1d(n_devices: int, axis_name: str):
+    """A 1-D mesh over the first ``n_devices`` local devices.
+
+    Unlike :func:`make_mesh` / ``jax.make_mesh`` this slices the device
+    list explicitly, so sweeps can shard over a subset of the host's
+    devices (``jax.make_mesh`` insists on consuming a specific count in
+    some versions and reorders devices in others).
+    """
+    devs = np.asarray(jax.devices()[:n_devices])
+    if HAS_AXIS_TYPES:
+        return jax.sharding.Mesh(
+            devs, (axis_name,),
+            axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.sharding.Mesh(devs, (axis_name,))
 
 
 def activate_mesh(mesh):

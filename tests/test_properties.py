@@ -75,6 +75,69 @@ def test_tagarray_lru_matches_reference(addrs):
 
 
 # ---------------------------------------------------------------------------
+# scatter-mask invariants: touch/fill mutate masked-in targets only
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_fill_and_touch_scatter_mask_invariants(data):
+    n_arrays, n_sets, n_ways = 3, 2, 2
+    R = data.draw(st.integers(1, 12))
+    idx = st.lists(st.integers(0, 10**6), min_size=R, max_size=R)
+    a = np.asarray(data.draw(idx)) % n_arrays
+    s = np.asarray(data.draw(idx)) % n_sets
+    w = np.asarray(data.draw(idx)) % n_ways
+    addr = np.asarray(data.draw(idx), np.int32) + 1
+    mask = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=R, max_size=R)))
+    dirty = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=R, max_size=R)))
+
+    # a warmed-up state so changes are detectable against non-zeros
+    state = tagarray.init_tag_state(n_arrays, n_sets, n_ways)
+    warm_a = np.arange(n_arrays).repeat(n_sets * n_ways) % n_arrays
+    warm_s = (np.arange(n_arrays * n_sets * n_ways) // n_ways) % n_sets
+    warm_w = np.arange(n_arrays * n_sets * n_ways) % n_ways
+    state, _ = tagarray.fill(
+        state, jnp.asarray(warm_a, jnp.int32), jnp.asarray(warm_s, jnp.int32),
+        jnp.asarray(warm_w, jnp.int32),
+        jnp.asarray(1000 + np.arange(warm_a.size), jnp.int32),
+        jnp.int32(1), jnp.asarray(np.ones(warm_a.size, bool)))
+
+    filled, _ = tagarray.fill(
+        state, jnp.asarray(a, jnp.int32), jnp.asarray(s, jnp.int32),
+        jnp.asarray(w, jnp.int32), jnp.asarray(addr), jnp.int32(5),
+        jnp.asarray(mask), dirty=jnp.asarray(dirty))
+    touched = tagarray.touch(
+        state, jnp.asarray(a, jnp.int32), jnp.asarray(s, jnp.int32),
+        jnp.asarray(w, jnp.int32), jnp.int32(5), jnp.asarray(mask),
+        set_dirty=jnp.asarray(dirty))
+
+    targets = {(int(ai), int(si), int(wi))
+               for ai, si, wi, m in zip(a, s, w, mask) if m}
+    for out in (filled, touched):
+        for key in out:
+            before, after = np.asarray(state[key]), np.asarray(out[key])
+            changed = np.argwhere(before != after)
+            for ai, si, wi in changed:
+                # every mutation lands on a masked-in target — never on
+                # (0,0,0) or anywhere else by accident
+                assert (int(ai), int(si), int(wi)) in targets, (
+                    key, (ai, si, wi), targets)
+    # masked-in fills actually install one of their writers' lines
+    tags = np.asarray(filled["tags"])
+    for t in targets:
+        writers = [int(x) for x, (ai, si, wi, m) in
+                   zip(addr, zip(a, s, w, mask)) if m
+                   and (int(ai), int(si), int(wi)) == t]
+        assert tags[t] in writers
+        assert bool(np.asarray(filled["valid"])[t])
+    if not mask.any():
+        for key in state:
+            np.testing.assert_array_equal(np.asarray(filled[key]),
+                                          np.asarray(state[key]))
+
+
+# ---------------------------------------------------------------------------
 # gradient compression (error feedback)
 # ---------------------------------------------------------------------------
 @settings(max_examples=20, deadline=None)

@@ -11,6 +11,48 @@ from repro.core import (APPS, PAPER_GEOMETRY, AppParams, make_trace,
 from repro.core import tagarray
 
 
+def test_masked_fill_touch_never_clobber_entry_zero():
+    """Regression: masked-out requests used to be parked at (0,0,0) and
+    scatter their *old* value back; with duplicate scatter indices a
+    late parked lane could revert a genuine update to array 0 / set 0 /
+    way 0 (fill undone, dirty bit lost -> missed write-back). They must
+    be dropped outright."""
+    state = tagarray.init_tag_state(2, 2, 2)
+    # request 0: genuine fill at (0,0,0); request 1: masked OUT — its
+    # scatter lane must neither land at its own target nor at (0,0,0).
+    a = jnp.asarray([0, 1], jnp.int32)
+    s = jnp.asarray([0, 1], jnp.int32)
+    w = jnp.asarray([0, 1], jnp.int32)
+    addr = jnp.asarray([42, 99], jnp.int32)
+    mask = jnp.asarray([True, False])
+    st, _ = tagarray.fill(state, a, s, w, addr, jnp.int32(3), mask,
+                          dirty=jnp.asarray([True, False]))
+    assert int(st["tags"][0, 0, 0]) == 42
+    assert bool(st["valid"][0, 0, 0]) and bool(st["dirty"][0, 0, 0])
+    assert int(st["born"][0, 0, 0]) == 3 and int(st["last"][0, 0, 0]) == 3
+    assert not bool(st["valid"][1, 1, 1])          # masked-out: untouched
+
+    # touch: a masked-out lane (and a masked-in read hit) must not
+    # clobber the dirty bit a masked-in write sets at (0,0,0).
+    st2 = tagarray.touch(st, jnp.asarray([0, 0], jnp.int32),
+                         jnp.asarray([0, 0], jnp.int32),
+                         jnp.asarray([0, 0], jnp.int32), jnp.int32(7),
+                         jnp.asarray([True, True]),
+                         set_dirty=jnp.asarray([True, False]))
+    assert bool(st2["dirty"][0, 0, 0])
+    assert int(st2["last"][0, 0, 0]) == 7
+
+    # all-masked-out ops are exact no-ops on every field
+    none = jnp.asarray([False, False])
+    st3, wb = tagarray.fill(st, a, s, w, addr, jnp.int32(9), none)
+    st4 = tagarray.touch(st, a, s, w, jnp.int32(9), none,
+                         set_dirty=jnp.asarray([True, True]))
+    for k in st:
+        np.testing.assert_array_equal(np.asarray(st3[k]), np.asarray(st[k]))
+        np.testing.assert_array_equal(np.asarray(st4[k]), np.asarray(st[k]))
+    assert not bool(wb.any())
+
+
 def test_probe_many_parallel_compare():
     state = tagarray.init_tag_state(4, 2, 2)
     # plant line 7 in caches 1 and 3, set 1
