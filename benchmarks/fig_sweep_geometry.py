@@ -1,15 +1,25 @@
 """Geometry sensitivity: ATA's IPC win vs private across an L1 grid.
 
-Sweeps three geometry knobs around the paper's Table-II point —
+Sweeps six geometry knobs around the paper's Table-II point —
 
   l1_sets      (structural: regroups per shape)
+  l1_ways      (structural: associativity)
   svc_port     (ATA remote-data port service time: traced scalar)
   cluster_size (structural: aggregation breadth)
+  noc_bw       (probe-network bandwidth: traced scalar)
+  hide         (warp-level latency-hiding depth: traced scalar)
 
 — for ``ata`` vs ``private`` over one high-locality app's kernels, all
 through one ``SweepGrid`` run per knob via ``cached_grid``. Scalar-only
-variants (``svc_port``) share a single executable; structural variants
-compile one per shape. Emits the ata/private IPC ratio per grid point.
+variants (``svc_port``/``noc_bw``/``hide``) share a single executable;
+structural variants compile one per shape. Emits the ata/private IPC
+ratio per grid point. The ``noc_bw`` knob additionally sweeps the
+``remote`` baseline (its probe network is the only ``noc_bw``
+consumer — private/ata are flat on that axis by construction) and
+emits the remote/private ratio. The full policy-zoo variant of this
+sweep — with ciao/victim and machine-readable output — is
+``repro.core.report.run_sensitivity`` (``benchmarks.run
+--report-json``).
 """
 import dataclasses
 import time
@@ -23,8 +33,11 @@ ARCHS = ("private", "ata")
 #: knob -> swept values (middle value = the paper geometry's own).
 KNOBS = {
     "l1_sets": (4, 8, 16),
+    "l1_ways": (32, 64, 128),
     "svc_port": (1, 2, 4),
     "cluster_size": (5, 10, 15),
+    "noc_bw": (8.0, 16.0, 32.0),
+    "hide": (5.0, 10.0, 20.0),
 }
 
 
@@ -32,9 +45,10 @@ def run(kernels_per_app=1, rounds=None):
     out = {}
     for knob, values in KNOBS.items():
         t0 = time.perf_counter()
+        archs = ARCHS + (("remote",) if knob == "noc_bw" else ())
         geoms = [dataclasses.replace(PAPER_GEOMETRY, **{knob: v})
                  for v in values]
-        grid = cached_grid([APP], ARCHS, geoms,
+        grid = cached_grid([APP], archs, geoms,
                            kernels_per_app=kernels_per_app or None,
                            rounds=rounds)
         us = (time.perf_counter() - t0) * 1e6
@@ -44,4 +58,9 @@ def run(kernels_per_app=1, rounds=None):
             out[(knob, v)] = ratio
             emit(f"fig_sweep.{APP}.{knob}={v}.ata_vs_private",
                  us / len(values), f"{ratio:.3f}")
+            if "remote" in archs:
+                rratio = res["remote"].ipc / res["private"].ipc
+                out[(knob, v, "remote")] = rratio
+                emit(f"fig_sweep.{APP}.{knob}={v}.remote_vs_private",
+                     us / len(values), f"{rratio:.3f}")
     return out

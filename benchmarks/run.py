@@ -1,7 +1,15 @@
 """Benchmark suite: one module per paper table/figure + kernels +
 serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--rounds N]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--rounds N] \
+      [--report-json PATH]
+
+--report-json additionally runs the contention-policy-zoo sensitivity
+sweep (``repro.core.report``: private/ata/ciao/victim over widened
+l1_ways / noc_bw / hide axes) and writes the machine-readable report
+JSON + markdown table to PATH — CI's sharded-sweep-smoke job uploads it
+as an artifact and gates on drift vs the committed baseline
+(``benchmarks/baselines/``, ``scripts/check_bench_regression.py``).
 
 --full uses every per-app kernel (Fig. 9 fidelity); default trims for
 CI speed on the 1-core container. --rounds truncates every trace (CI
@@ -23,6 +31,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--rounds", type=int, default=None,
                     help="truncate every trace to N rounds (CI smoke)")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="write the policy-zoo sensitivity report "
+                    "(JSON + sibling .md) to PATH")
     args = ap.parse_args()
     k = 0 if args.full else 1
     k9 = 0 if args.full else 3
@@ -46,6 +57,19 @@ def main() -> None:
     emit("sweep.figures_total_s", wall * 1e6, f"{wall:.2f}")
     emit("sweep.executables_compiled", 0.0, sweep_engine.compile_count())
     emit("sweep.devices", 0.0, len(jax.devices()))
+    if args.report_json:
+        from repro.core import report as sensitivity
+        t0 = time.perf_counter()
+        rep = sensitivity.run_sensitivity(
+            kernels_per_app=None if args.full else 1, rounds=args.rounds)
+        md_path = sensitivity.write_report(args.report_json, rep)
+        emit("sensitivity.cells", (time.perf_counter() - t0) * 1e6,
+             len(rep["cells"]))
+        emit("sensitivity.executables", 0.0,
+             rep["sweep"]["n_executables"])
+        print(f"sensitivity report: {args.report_json} + {md_path}",
+              file=sys.stderr)
+
     kernel_micro.run()
     serving_ata.run()
 

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate.
+
+Compares a freshly produced sensitivity report (``benchmarks.run
+--report-json``) against the committed baseline and exits non-zero on
+IPC drift beyond the tolerance or executable-count growth:
+
+    PYTHONPATH=src python scripts/check_bench_regression.py \
+        benchmarks/baselines/sensitivity_rounds96.json \
+        BENCH_sensitivity.json [--ipc-rtol 0.10]
+
+To update the baseline after an *intentional* performance or model
+change, regenerate it with the same configuration CI uses and commit:
+
+    PYTHONPATH=src python -m benchmarks.run --rounds 96 \
+        --report-json benchmarks/baselines/sensitivity_rounds96.json
+"""
+import argparse
+import sys
+
+from repro.core.report import compare_reports, load_report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", help="committed baseline report JSON")
+    ap.add_argument("candidate", help="freshly produced report JSON")
+    ap.add_argument("--ipc-rtol", type=float, default=0.10,
+                    help="allowed per-cell IPC drift (default 10%%)")
+    args = ap.parse_args()
+
+    baseline = load_report(args.baseline)
+    candidate = load_report(args.candidate)
+    failures = compare_reports(baseline, candidate,
+                               ipc_rtol=args.ipc_rtol)
+    if failures:
+        print(f"benchmark regression gate FAILED "
+              f"({len(failures)} finding(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        print("(intentional change? regenerate the baseline — see "
+              "--help)", file=sys.stderr)
+        return 1
+    n = len(baseline["cells"])
+    print(f"benchmark regression gate OK: {n} cells within "
+          f"±{args.ipc_rtol:.0%} IPC, executables "
+          f"{candidate['sweep']['n_executables']} <= "
+          f"{baseline['sweep']['n_executables']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

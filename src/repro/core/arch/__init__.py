@@ -30,6 +30,8 @@ from repro.core.arch.remote import RemotePolicy
 from repro.core.arch.decoupled import DecoupledPolicy
 from repro.core.arch.ata import AtaPolicy
 from repro.core.arch.ata_bypass import AtaBypassPolicy
+from repro.core.arch.ciao import CiaoPolicy
+from repro.core.arch.victim import VictimPolicy
 from repro.core.tagarray import ReplacementPolicy
 
 #: The paper's comparison set (Figs. 8–10, Table I) — a stable subset of
@@ -71,10 +73,15 @@ register_arch(AtaPolicy())
 register_arch(AtaBypassPolicy())
 register_arch(AtaPolicy(name="ata_fifo",
                         replacement=ReplacementPolicy.FIFO))
+# Contention-policy zoo: CIAO-style throttling stacks with the private
+# family, the victim tag buffer with the ATA family.
+register_arch(CiaoPolicy())
+register_arch(VictimPolicy())
 
 __all__ = [
     "TAG_CHECK", "ArchPolicy", "L1Outcome", "RequestBatch",
     "PrivatePolicy", "RemotePolicy", "DecoupledPolicy", "AtaPolicy",
-    "AtaBypassPolicy", "PAPER_ARCHITECTURES", "register_arch", "get_arch",
+    "AtaBypassPolicy", "CiaoPolicy", "VictimPolicy",
+    "PAPER_ARCHITECTURES", "register_arch", "get_arch",
     "registered_archs",
 ]

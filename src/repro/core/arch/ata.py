@@ -29,6 +29,17 @@ class AtaPolicy(ArchPolicy):
         # index.
         return "ata"
 
+    def _victim_prefilter(self, l1: tagarray.TagState, reqs: RequestBatch):
+        """Hook: mask of requests a victim structure can serve locally.
+
+        Probed on L1 miss *before* the remote path — a hit here is
+        served inside the core's own L1 complex (one extra sequential
+        tag check) and never enters the remote-port contention group or
+        crosses the crossbar. The base policy has no victim structure:
+        ``None`` keeps the stage's computation graph untouched.
+        """
+        return None
+
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
                  reqs: RequestBatch, t) -> L1Outcome:
         addr, set_idx = reqs.addr, reqs.set_idx
@@ -43,6 +54,11 @@ class AtaPolicy(ArchPolicy):
                             ways, reqs.self_slot[:, None], axis=1)[:, 0],
                         tagarray.probe(l1, reqs.core, set_idx, addr,
                                        policy=self.replacement)[1])
+        # victim prefilter: read misses served by a victim structure
+        # (when the subclass provides one) skip the remote path.
+        pre = self._victim_prefilter(l1, reqs)
+        vserved = (None if pre is None
+                   else pre & ~local_hit & ~reqs.is_write)
         rmask = hits & ~is_self
         any_remote = rmask.any(axis=-1)
         src_slot = jnp.argmax(rmask, axis=-1)
@@ -53,29 +69,38 @@ class AtaPolicy(ArchPolicy):
         # copies divert the read to L2.
         remote_ok = ((~reqs.is_write) & (~local_hit) & any_remote
                      & (~src_dirty))
+        if vserved is not None:
+            remote_ok = remote_ok & ~vserved
         prank, psize = group_rank(src_cache, remote_ok, geom.n_cores)
         # only *actual* remote hits occupy the remote data port — the
         # filtering that is the paper's core contention win.
         occupancy = jnp.where(
             remote_ok, psize.astype(jnp.float32) * geom.svc_port, 0.0)
         served = local_hit | remote_ok
+        local_hits = local_hit
+        l1_time = jnp.where(
+            local_hit, geom.lat_l1 * 1.0,
+            jnp.where(remote_ok,
+                      geom.lat_l1 + geom.lat_xbar
+                      + prank.astype(jnp.float32) * geom.svc_port,
+                      float(TAG_CHECK)))
+        if vserved is not None:
+            served = served | vserved
+            local_hits = local_hits | vserved
+            l1_time = jnp.where(vserved,
+                                geom.lat_l1 + float(TAG_CHECK), l1_time)
         l1 = tagarray.touch(l1, reqs.core, set_idx, way, t, local_hit,
                             set_dirty=reqs.is_write)
         return L1Outcome(
             l1=l1,
             served=served,
-            l1_time=jnp.where(
-                local_hit, geom.lat_l1 * 1.0,
-                jnp.where(remote_ok,
-                          geom.lat_l1 + geom.lat_xbar
-                          + prank.astype(jnp.float32) * geom.svc_port,
-                          float(TAG_CHECK))),
+            l1_time=l1_time,
             go_l2=~served,
             pre_l2=jnp.full((reqs.n_requests,), float(TAG_CHECK)),
             occupancy=occupancy,
             fill_cache=reqs.core,
             fill_set=set_idx,
-            local_hits=local_hit,
+            local_hits=local_hits,
             remote_hits=remote_ok,
             noc_flits=jnp.sum(remote_ok) * geom.flits_per_line,
         )

@@ -34,12 +34,8 @@ class AtaBypassPolicy(AtaPolicy):
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
                  reqs: RequestBatch, t) -> L1Outcome:
         out = super().l1_stage(geom, l1, reqs, t)
-        _, victim, _ = tagarray.probe(out.l1, out.fill_cache, out.fill_set,
-                                      reqs.addr, policy=self.replacement)
-        vict_last = out.l1["last"][out.fill_cache, out.fill_set, victim]
-        vict_born = out.l1["born"][out.fill_cache, out.fill_set, victim]
-        vict_valid = out.l1["valid"][out.fill_cache, out.fill_set, victim]
-        dead_victim = vict_valid & (vict_last == vict_born)
+        dead = tagarray.dead_victim(out.l1, out.fill_cache, out.fill_set,
+                                    reqs.addr, policy=self.replacement)
         # only L2-bound misses bypass; remote hits still replicate locally
         # (they are proven-shared lines, the opposite of streaming data).
-        return out._replace(bypass_fill=out.go_l2 & dead_victim)
+        return out._replace(bypass_fill=out.go_l2 & dead)

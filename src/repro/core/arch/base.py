@@ -78,9 +78,19 @@ class ArchPolicy:
     ``replacement`` selects the victim scheme the policy's tag probes and
     the shared fill stage use for this architecture's L1 arrays (the L2
     always runs LRU).
+
+    ``victim_ways`` / ``track_thrash`` declare the policy's TagState
+    extensions (victim tag buffer entries per cache, per-core thrash
+    counters). The simulator sizes the L1 state by the *maximum* over a
+    dataflow group, so a policy that declares an extension can stack
+    with family members that ignore it: the extension arrays are
+    zero-sized when nobody asks for them (existing goldens stay
+    bit-exact) and dead weight in the branches that do not read them.
     """
     name: str
     replacement: ReplacementPolicy = ReplacementPolicy.LRU
+    victim_ways: int = 0
+    track_thrash: bool = False
 
     @property
     def stack_key(self) -> str:

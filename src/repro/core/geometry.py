@@ -122,13 +122,18 @@ class GeomScalars(NamedTuple):
     hide: jnp.ndarray
 
 
+def geom_structure(geom: GpuGeometry) -> GeomStructure:
+    """The shape-determining key of ``geom`` alone — no device commits,
+    so grid validation can key geometries without paying
+    :func:`split_geometry`'s scalar transfers."""
+    return GeomStructure(*(getattr(geom, f) for f in GEOM_STRUCTURE_FIELDS))
+
+
 def split_geometry(geom: GpuGeometry):
     """``geom`` -> (static :class:`GeomStructure`, f32 :class:`GeomScalars`)."""
-    structure = GeomStructure(
-        *(getattr(geom, f) for f in GEOM_STRUCTURE_FIELDS))
     scalars = GeomScalars(
         *(jnp.float32(getattr(geom, f)) for f in GEOM_SCALAR_FIELDS))
-    return structure, scalars
+    return geom_structure(geom), scalars
 
 
 class TracedGeometry:

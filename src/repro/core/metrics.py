@@ -55,6 +55,15 @@ class AppResult:
         return _nanmean(r.l1_hit_rate for r in self.per_kernel)
 
     @property
+    def remote_hit_rate(self) -> float:
+        # remote-probe service rate: requests served by a peer L1
+        return _nanmean(r.remote_hit_rate for r in self.per_kernel)
+
+    @property
+    def noc_flits(self) -> float:
+        return float(sum(r.noc_flits for r in self.per_kernel))
+
+    @property
     def l2_accesses(self) -> float:
         return float(sum(r.l2_accesses for r in self.per_kernel))
 

@@ -1,0 +1,197 @@
+"""Sensitivity reports over :class:`~repro.core.sweep.SweepGrid` runs.
+
+:func:`run_sensitivity` sweeps the contention-policy zoo over widened
+geometry axes around the paper's Table-II point —
+
+    l1_ways : L1 associativity (structural: regroups per shape)
+    noc_bw  : probe-network bandwidth (traced scalar)
+    hide    : warp-level latency-hiding depth (traced scalar)
+
+— every (arch x knob-value x kernel) point through *one* grid run, and
+aggregates per (arch x geometry) cell into a machine-readable report
+dict: IPC, L1 hit rate, remote-probe rate, NoC flits, plus the grid's
+:class:`~repro.core.sweep.SweepReport` accounting. :func:`write_report`
+serializes it as ``BENCH_sensitivity.json`` with a markdown sensitivity
+table alongside; ``benchmarks.run --report-json`` wires it into the
+benchmark driver.
+
+The report doubles as CI's benchmark-regression gate:
+:func:`compare_reports` diffs a fresh report against a committed
+baseline and flags per-cell IPC drift beyond a tolerance or
+executable-count growth (``scripts/check_bench_regression.py`` is the
+thin CLI; the sharded-sweep-smoke workflow job runs it on every PR).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
+from repro.core.metrics import AppResult, app_traces, kernel_range
+from repro.core.sweep import SweepGrid, SweepPoint
+
+SCHEMA_VERSION = 1
+
+#: The zoo comparison set: the paper's poles, the probe-broadcast
+#: baseline (the only ``noc_bw`` consumer), and both new policies.
+SENSITIVITY_ARCHS: Tuple[str, ...] = ("private", "remote", "ata", "ciao",
+                                      "victim")
+
+#: Widened geometry axes (ROADMAP follow-on); middle value = paper point.
+SENSITIVITY_KNOBS: Dict[str, Tuple] = {
+    "l1_ways": (32, 64, 128),
+    "noc_bw": (8.0, 16.0, 32.0),
+    "hide": (5.0, 10.0, 20.0),
+}
+
+#: Metrics reported per (arch x geometry) cell.
+CELL_METRICS = ("ipc", "l1_hit_rate", "remote_hit_rate", "noc_flits",
+                "l1_latency")
+
+
+def run_sensitivity(app: str = "HS3D",
+                    archs: Sequence[str] = SENSITIVITY_ARCHS,
+                    knobs: Optional[Dict[str, Tuple]] = None,
+                    kernels_per_app: Optional[int] = 1,
+                    rounds: Optional[int] = None,
+                    geom: GpuGeometry = PAPER_GEOMETRY,
+                    n_devices: Optional[int] = None) -> dict:
+    """One grid run over (arch x knob-value x kernel); report dict out."""
+    knobs = dict(SENSITIVITY_KNOBS if knobs is None else knobs)
+    archs = tuple(archs)
+    traces = app_traces(app, geom, kernel_range(app, kernels_per_app),
+                        rounds=rounds)
+    # Each knob lists the paper point among its values, so several cells
+    # share one (arch, geometry): simulate each unique pair once and fan
+    # the result out to every cell that references it.
+    labels: List[Tuple[str, object, str, GpuGeometry]] = []
+    start: Dict[Tuple[str, GpuGeometry], int] = {}
+    points: List[SweepPoint] = []
+    for knob, values in knobs.items():
+        for value in values:
+            g = dataclasses.replace(geom, **{knob: value})
+            for arch in archs:
+                labels.append((knob, value, arch, g))
+                if (arch, g) not in start:
+                    start[(arch, g)] = len(points)
+                    points.extend(SweepPoint(arch, g, t) for t in traces)
+    grid = SweepGrid.from_points(points)
+    run = grid.run(n_devices=n_devices)
+
+    cells = []
+    per_cell = len(traces)
+    for knob, value, arch, g in labels:
+        lo = start[(arch, g)]
+        agg = AppResult(app, arch, run.results[lo:lo + per_cell])
+        cell = {"knob": knob, "value": value, "arch": arch}
+        for metric in CELL_METRICS:
+            cell[metric] = float(getattr(agg, metric))
+        cells.append(cell)
+
+    return {
+        "schema": SCHEMA_VERSION,
+        "config": {
+            "app": app,
+            "archs": list(archs),
+            "knobs": {k: list(v) for k, v in knobs.items()},
+            "kernels_per_app": kernels_per_app,
+            "rounds": rounds,
+        },
+        "sweep": {
+            "n_points": run.report.n_points,
+            "n_executables": run.report.n_executables,
+            "n_compiles": run.report.n_compiles,
+            "n_devices": run.report.n_devices,
+            "wall_s": round(run.report.wall_s, 3),
+        },
+        "cells": cells,
+    }
+
+
+def to_markdown(report: dict) -> str:
+    """Render the report as a markdown sensitivity table."""
+    cfg = report["config"]
+    lines = [
+        f"# Sensitivity report — app `{cfg['app']}`",
+        "",
+        f"archs: {', '.join(cfg['archs'])} · "
+        f"kernels/app: {cfg['kernels_per_app']} · "
+        f"rounds: {cfg['rounds'] if cfg['rounds'] else 'full'} · "
+        f"executables: {report['sweep']['n_executables']}",
+        "",
+        "| knob | value | arch | IPC | L1 hit | remote hit | NoC flits |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in report["cells"]:
+        lines.append(
+            f"| {c['knob']} | {c['value']:g} | {c['arch']} "
+            f"| {c['ipc']:.3f} | {c['l1_hit_rate']:.4f} "
+            f"| {c['remote_hit_rate']:.4f} | {c['noc_flits']:.0f} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_report(path: str, report: dict) -> str:
+    """Write ``report`` as JSON, plus the markdown table next to it.
+
+    Returns the markdown path (``<path minus .json>.md``).
+    """
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    base, ext = os.path.splitext(path)
+    md_path = (base if ext == ".json" else path) + ".md"
+    with open(md_path, "w") as f:
+        f.write(to_markdown(report))
+    return md_path
+
+
+def load_report(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _cell_key(cell: dict) -> tuple:
+    return (cell["arch"], cell["knob"], cell["value"])
+
+
+def compare_reports(baseline: dict, candidate: dict, *,
+                    ipc_rtol: float = 0.10) -> List[str]:
+    """Regression-gate diff; returns human-readable failure strings.
+
+    Fails on: schema/config mismatch (the runs are not comparable),
+    missing cells, per-cell IPC drift beyond ``ipc_rtol`` in *either*
+    direction (improvements require a conscious baseline update too),
+    and executable-count growth (compile-count regressions).
+    """
+    failures: List[str] = []
+    if baseline.get("schema") != candidate.get("schema"):
+        return [f"schema mismatch: baseline {baseline.get('schema')} "
+                f"vs candidate {candidate.get('schema')}"]
+    if baseline["config"] != candidate["config"]:
+        return [f"config mismatch — reports are not comparable: "
+                f"baseline {baseline['config']} "
+                f"vs candidate {candidate['config']}"]
+
+    base_exec = baseline["sweep"]["n_executables"]
+    cand_exec = candidate["sweep"]["n_executables"]
+    if cand_exec > base_exec:
+        failures.append(
+            f"executable count grew: {base_exec} -> {cand_exec} "
+            "(policy stacking / geometry batching regression)")
+
+    cand_cells = {_cell_key(c): c for c in candidate["cells"]}
+    for base_cell in baseline["cells"]:
+        key = _cell_key(base_cell)
+        cell = cand_cells.get(key)
+        if cell is None:
+            failures.append(f"cell missing from candidate: {key}")
+            continue
+        base_ipc, cand_ipc = base_cell["ipc"], cell["ipc"]
+        drift = abs(cand_ipc - base_ipc) / abs(base_ipc)
+        if drift > ipc_rtol:
+            failures.append(
+                f"IPC drift {drift:+.1%} beyond ±{ipc_rtol:.0%} at "
+                f"{key}: {base_ipc:.3f} -> {cand_ipc:.3f}")
+    return failures

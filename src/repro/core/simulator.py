@@ -52,7 +52,8 @@ from repro.core.arch import (PAPER_ARCHITECTURES, ArchPolicy, get_arch,
                              registered_archs)
 from repro.core.arch.base import TAG_CHECK, RequestBatch
 from repro.core.contention import group_rank
-from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
+from repro.core.geometry import (GEOM_SCALAR_FIELDS, GeomScalars,
+                                 GeomStructure, GpuGeometry, PAPER_GEOMETRY,
                                  TracedGeometry, split_geometry)
 
 #: Backwards-compatible alias: the paper's comparison set. The full,
@@ -79,8 +80,19 @@ class SimResult(NamedTuple):
     instructions: float
 
 
-def _l1_state(geom) -> tagarray.TagState:
-    return tagarray.init_tag_state(geom.n_cores, geom.l1_sets, geom.l1_ways)
+def _l1_state(geom, policies: Sequence[ArchPolicy]) -> tagarray.TagState:
+    """L1 tag state sized for a whole dataflow group.
+
+    The zoo state extensions (victim buffer, thrash counters) take the
+    *maximum* the group's policies declare, so stacked family members
+    share one state pytree; policies that ignore an extension are
+    bit-exact whether it is zero-sized or not.
+    """
+    victim = max(p.victim_ways for p in policies)
+    thrash = geom.n_cores if any(p.track_thrash for p in policies) else 0
+    return tagarray.init_tag_state(geom.n_cores, geom.l1_sets,
+                                   geom.l1_ways, victim_ways=victim,
+                                   thrash_lanes=thrash)
 
 
 def _l2_state(geom) -> tagarray.TagState:
@@ -203,10 +215,11 @@ def _sim_core(archs: Tuple[str, ...], point_arrays,
     """
     addr, is_write, insn_per_req, scalars, policy_idx = point_arrays
     geom = TracedGeometry(structure, scalars)
-    state = (_l1_state(geom), _l2_state(geom), jnp.int32(0),
+    policies = [get_arch(a) for a in archs]
+    state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
              _init_stats(geom))
-    steps = [functools.partial(_round, get_arch(a), geom, insn_per_req)
-             for a in archs]
+    steps = [functools.partial(_round, p, geom, insn_per_req)
+             for p in policies]
     if len(steps) == 1:
         step = steps[0]
     else:
@@ -231,6 +244,39 @@ def _point_arrays(trace_like, scalars, policy_idx=0):
     """Pack one grid point's traced leaves for :func:`_sim_core`."""
     addr, is_write, insn = trace_like
     return (addr, is_write, insn, scalars, jnp.int32(policy_idx))
+
+
+def round_signature(group: Tuple[str, ...], arch: str,
+                    structure: GeomStructure,
+                    round_shape: Tuple[int, int]):
+    """Abstract shape/dtype pytree of one scanned round of ``arch``.
+
+    The round is evaluated (``jax.eval_shape`` — no compilation, no
+    FLOPs) with the L1 state sized for the whole dataflow ``group``,
+    exactly as :func:`_sim_core` would compile it. Policies that may
+    stack into one executable must produce identical signatures — the
+    carried state pytrees are what ``lax.switch`` requires to line up —
+    and ``repro.core.sweep.SweepGrid`` validates that with this
+    function before it buckets a grid.
+    """
+    C, m = round_shape
+    policies = [get_arch(a) for a in group]
+    scalars = GeomScalars(*(jax.ShapeDtypeStruct((), jnp.float32)
+                            for _ in GEOM_SCALAR_FIELDS))
+
+    def one_round(scalars, addr, is_write):
+        geom = TracedGeometry(structure, scalars)
+        state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
+                 _init_stats(geom))
+        new_state, _ = _round(get_arch(arch), geom, jnp.float32(1.0),
+                              state, (addr, is_write))
+        return new_state
+
+    out = jax.eval_shape(one_round, scalars,
+                         jax.ShapeDtypeStruct((C, m), jnp.int32),
+                         jax.ShapeDtypeStruct((C, m), jnp.bool_))
+    leaves, treedef = jax.tree.flatten(out)
+    return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
 
 
 def _summarize(stats, shape, insn_per_req: float) -> SimResult:

@@ -47,10 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
-                                 split_geometry)
+                                 geom_structure, split_geometry)
 from repro.core.simulator import (SimResult, Trace, _check_arch, _sim_core,
-                                  _summarize)
-from repro.core.arch import get_arch
+                                  _summarize, round_signature)
+from repro.core.arch import get_arch, registered_archs
 from repro.sharding.compat import make_mesh_1d, shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -120,6 +120,30 @@ def _validate_geom(geom: GpuGeometry) -> None:
             f"n_cores={geom.n_cores}")
 
 
+def _canonical_group(archs: Iterable[str]) -> Tuple[str, ...]:
+    """A dataflow family as an order-independent executable key.
+
+    Members are ordered by registry position, so grids that name the
+    same family in different point orders share one compiled executable
+    (and one signature memo entry) instead of recompiling per ordering.
+    """
+    order = {name: i for i, name in enumerate(registered_archs())}
+    return tuple(sorted(archs, key=lambda a: order[a]))
+
+
+#: Memoized abstract round signatures (eval_shape is cheap, not free).
+_SIG_MEMO: Dict[tuple, object] = {}
+
+
+def _signature(group: Tuple[str, ...], arch: str, structure: GeomStructure,
+               round_shape: Tuple[int, int]):
+    key = (group, arch, structure, round_shape)
+    if key not in _SIG_MEMO:
+        _SIG_MEMO[key] = round_signature(group, arch, structure,
+                                         round_shape)
+    return _SIG_MEMO[key]
+
+
 class SweepGrid:
     """A cartesian (arch x geometry x trace) grid and its sweep engine.
 
@@ -156,6 +180,43 @@ class SweepGrid:
             if id(p.geom) not in seen:
                 seen.add(id(p.geom))
                 _validate_geom(p.geom)
+        self._validate_stacking()
+
+    def _validate_stacking(self) -> None:
+        """Reject stack_key families whose members' dataflow diverges.
+
+        Architectures sharing a ``stack_key`` promise an identical round
+        dataflow (same carried state pytree) so the engine may compile
+        them into one switch-selected executable. A new policy that
+        claims an existing family's key but, say, threads an extra
+        state array would fail deep inside ``lax.switch`` with an
+        opaque shape error — catch it here, per (family, geometry
+        structure, round shape) actually swept together, with a message
+        that names the offending architecture.
+        """
+        families: Dict[str, List[str]] = {}
+        for p in self.points:
+            fam = families.setdefault(get_arch(p.arch).stack_key, [])
+            if p.arch not in fam:
+                fam.append(p.arch)
+        for key, archs in families.items():
+            if len(archs) < 2:
+                continue
+            members = set(archs)
+            combos = {(geom_structure(p.geom), p.trace.addr.shape[1:])
+                      for p in self.points if p.arch in members}
+            group = _canonical_group(archs)
+            for structure, round_shape in combos:
+                ref = _signature(group, archs[0], structure, round_shape)
+                for arch in archs[1:]:
+                    if _signature(group, arch, structure,
+                                  round_shape) != ref:
+                        raise ValueError(
+                            f"stack_key {key!r}: architecture {arch!r} "
+                            f"does not share {archs[0]!r}'s round "
+                            "dataflow (state pytrees differ), so they "
+                            "cannot stack into one executable; give "
+                            f"{arch!r} its own stack_key")
 
     def run(self, n_devices: Optional[int] = None) -> SweepRun:
         """Sweep every grid point; one sharded dispatch per bucket."""
@@ -172,7 +233,7 @@ class SweepGrid:
                                   []).append(p.arch)
                 group_of[p.arch] = ()   # placeholder
         for archs in by_key.values():
-            group = tuple(archs)
+            group = _canonical_group(archs)
             for a in archs:
                 group_of[a] = group
 

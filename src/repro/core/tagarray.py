@@ -8,6 +8,20 @@ State is a dict of arrays so it threads through ``lax.scan`` carries:
     valid: (n_arrays, n_sets, n_ways) bool
     dirty: (n_arrays, n_sets, n_ways) bool
 
+plus two policy-zoo *state extensions*, zero-sized unless requested at
+``init_tag_state`` time (the keys are always present, so every TagState
+shares one pytree structure and stacked sweep executables line up):
+
+    vtags : (n_arrays, victim_ways) int32   victim tag buffer per array
+    vvalid: (n_arrays, victim_ways) bool    (fully associative, FIFO)
+    vborn : (n_arrays, victim_ways) int32   install timestamp per entry
+    thrash: (thrash_lanes,) int32           per-lane thrash counters
+
+Zero-sized extensions are exact no-ops: ``victim_probe`` returns all
+misses and ``victim_insert``/``victim_invalidate`` return the state
+unchanged, so architectures that ignore the extensions are bit-exact
+with and without them (a hypothesis test asserts this).
+
 Victim selection is controlled by :class:`ReplacementPolicy` (LRU, FIFO,
 or deterministic pseudo-random), threaded through ``probe``/``fill`` so
 architecture policies in ``repro.core.arch`` can run the same cache
@@ -54,7 +68,8 @@ class ReplacementPolicy(enum.Enum):
     RANDOM = "random"
 
 
-def init_tag_state(n_arrays: int, n_sets: int, n_ways: int) -> TagState:
+def init_tag_state(n_arrays: int, n_sets: int, n_ways: int, *,
+                   victim_ways: int = 0, thrash_lanes: int = 0) -> TagState:
     shape = (n_arrays, n_sets, n_ways)
     return {
         "tags": jnp.zeros(shape, jnp.int32),
@@ -62,6 +77,12 @@ def init_tag_state(n_arrays: int, n_sets: int, n_ways: int) -> TagState:
         "born": jnp.full(shape, -1, jnp.int32),
         "valid": jnp.zeros(shape, bool),
         "dirty": jnp.zeros(shape, bool),
+        # policy-zoo extensions — zero-sized unless a policy asks for
+        # them, so the pytree structure is uniform across architectures.
+        "vtags": jnp.zeros((n_arrays, victim_ways), jnp.int32),
+        "vvalid": jnp.zeros((n_arrays, victim_ways), bool),
+        "vborn": jnp.full((n_arrays, victim_ways), -1, jnp.int32),
+        "thrash": jnp.zeros((thrash_lanes,), jnp.int32),
     }
 
 
@@ -169,5 +190,85 @@ def fill(state: TagState, array_idx, set_idx, way, addr, now,
     new_dirty = dirty if dirty is not None else jnp.zeros_like(mask)
     dirty_arr = state["dirty"].at[a, set_idx, way].set(new_dirty,
                                                        mode="drop")
-    return {"tags": tags, "last": last, "born": born, "valid": valid,
-            "dirty": dirty_arr}, evicted_dirty
+    # dict(state, ...) so zoo state extensions (victim buffer, thrash
+    # counters) ride through untouched.
+    return dict(state, tags=tags, last=last, born=born, valid=valid,
+                dirty=dirty_arr), evicted_dirty
+
+
+def dead_victim(state: TagState, array_idx: jnp.ndarray,
+                set_idx: jnp.ndarray, addr: jnp.ndarray,
+                policy: ReplacementPolicy = ReplacementPolicy.LRU,
+                ) -> jnp.ndarray:
+    """Predict whether a fill for ``addr`` would evict a *dead* line.
+
+    Dead = the replacement victim the ``policy`` would select is valid
+    but was never re-touched after its own install (``last == born``) —
+    the set is absorbing streaming traffic. Shared detector of the
+    CIAO-style policies (``ata_bypass`` fill bypass, ``ciao`` thrash
+    counters).
+    """
+    _, victim, _ = probe(state, array_idx, set_idx, addr, policy=policy)
+    last = state["last"][array_idx, set_idx, victim]
+    born = state["born"][array_idx, set_idx, victim]
+    valid = state["valid"][array_idx, set_idx, victim]
+    return valid & (last == born)
+
+
+# ---------------------------------------------------------------------------
+# Victim tag buffer (policy-zoo extension; see module docstring)
+# ---------------------------------------------------------------------------
+def victim_ways(state: TagState) -> int:
+    """Entries per array in the victim tag buffer (0 = disabled)."""
+    return state["vtags"].shape[-1]
+
+
+def victim_probe(state: TagState, array_idx: jnp.ndarray,
+                 addr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fully-associative lookup in each request's victim buffer.
+
+    Returns (hit, slot). A zero-sized buffer never hits.
+    """
+    R = array_idx.shape[0]
+    if victim_ways(state) == 0:
+        return jnp.zeros((R,), bool), jnp.zeros((R,), jnp.int32)
+    vtags = state["vtags"][array_idx]            # (R, V)
+    vvalid = state["vvalid"][array_idx]
+    match = (vtags == addr[:, None]) & vvalid
+    hit = match.any(axis=-1)
+    slot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    return hit, slot
+
+
+def victim_invalidate(state: TagState, array_idx: jnp.ndarray,
+                      slot: jnp.ndarray, mask: jnp.ndarray) -> TagState:
+    """Drop masked requests' victim entries (e.g. on promote back to L1)."""
+    if victim_ways(state) == 0:
+        return state
+    a = jnp.where(mask, array_idx, state["vtags"].shape[0])
+    return dict(state, vvalid=state["vvalid"].at[a, slot].set(
+        False, mode="drop"))
+
+
+def victim_insert(state: TagState, array_idx: jnp.ndarray,
+                  addr: jnp.ndarray, now, mask: jnp.ndarray) -> TagState:
+    """FIFO-install masked requests' tags into their victim buffers.
+
+    Invalid slots win first, then the oldest install. Duplicate
+    (array, slot) targets resolve last-writer-wins, like ``fill`` — a
+    round that evicts several lines from one cache keeps only the last
+    (the buffer has one fill port).
+    """
+    if victim_ways(state) == 0:
+        return state
+    int_min = jnp.iinfo(jnp.int32).min
+    vvalid = state["vvalid"][array_idx]          # (R, V)
+    vborn = state["vborn"][array_idx]
+    slot = jnp.argmin(jnp.where(vvalid, vborn, int_min),
+                      axis=-1).astype(jnp.int32)
+    a = jnp.where(mask, array_idx, state["vtags"].shape[0])
+    return dict(
+        state,
+        vtags=state["vtags"].at[a, slot].set(addr, mode="drop"),
+        vvalid=state["vvalid"].at[a, slot].set(True, mode="drop"),
+        vborn=state["vborn"].at[a, slot].set(now, mode="drop"))

@@ -143,6 +143,27 @@ def test_register_arch_rejects_duplicates_and_non_policies():
         get_arch("no_such_arch")
     with pytest.raises(ValueError, match="arch must be one of"):
         simulate("no_such_arch", _fixed_trace("cfd"))
+    # the collision must leave the registered policy untouched
+    assert get_arch("ata").replacement is ReplacementPolicy.LRU
+
+
+#: Built-in registration order (arch/__init__.py import side effects);
+#: figures and sweep bucketing rely on it being deterministic.
+BUILTIN_ORDER = ("private", "remote", "decoupled", "ata", "ata_bypass",
+                 "ata_fifo", "ciao", "victim")
+
+
+def test_registered_archs_ordering_is_stable():
+    archs = registered_archs()
+    # insertion order, deterministic across calls; tests may append
+    # temporary policies, so compare the builtin subsequence
+    builtins = tuple(a for a in archs if a in BUILTIN_ORDER)
+    assert builtins == BUILTIN_ORDER
+    assert registered_archs() == archs
+    # overwrite=True keeps the original slot (dict update semantics)
+    register_arch(AtaPolicy(), overwrite=True)
+    assert tuple(a for a in registered_archs()
+                 if a in BUILTIN_ORDER) == BUILTIN_ORDER
 
 
 def test_new_policy_plugs_in_without_core_edits():

@@ -15,7 +15,13 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import tagarray
+from repro.core.arch.ata import AtaPolicy
+from repro.core.arch.ciao import CiaoPolicy
+from repro.core.arch.private import PrivatePolicy
+from repro.core.arch.victim import VictimPolicy
 from repro.core.contention import group_rank
+from repro.core.geometry import GpuGeometry
+from repro.core.simulator import _request_batch
 from repro.optim.compression import compress, decompress
 from repro.serving import hash_blocks
 
@@ -135,6 +141,79 @@ def test_fill_and_touch_scatter_mask_invariants(data):
         for key in state:
             np.testing.assert_array_equal(np.asarray(filled[key]),
                                           np.asarray(state[key]))
+
+
+# ---------------------------------------------------------------------------
+# policy-zoo degeneracy: zero-sized extensions change nothing, bit-exactly
+# ---------------------------------------------------------------------------
+#: Small geometry so random traces exercise hits, misses and evictions.
+_ZOO_GEOM = GpuGeometry(n_cores=4, cluster_size=2, l1_sets=2, l1_ways=2,
+                        l1_banks=2, l2_parts=2, l2_sets=4, l2_ways=2)
+_ZOO_M = 2
+
+
+def _zoo_state_and_reqs(data, *, victim_ways=0, thrash_lanes=0):
+    """A randomly warmed L1 state plus one random round's requests."""
+    g = _ZOO_GEOM
+    state = tagarray.init_tag_state(g.n_cores, g.l1_sets, g.l1_ways,
+                                    victim_ways=victim_ways,
+                                    thrash_lanes=thrash_lanes)
+    R = g.n_cores * _ZOO_M
+    lines = st.lists(st.integers(0, 15), min_size=R, max_size=R)
+    core = jnp.asarray(np.arange(g.n_cores).repeat(_ZOO_M), jnp.int32)
+    for t in range(data.draw(st.integers(1, 3))):    # warm-up fills
+        addr = jnp.asarray(data.draw(lines), jnp.int32)
+        set_idx = (addr % g.l1_sets).astype(jnp.int32)
+        _, way, _ = tagarray.probe(state, core, set_idx, addr)
+        state, _ = tagarray.fill(state, core, set_idx, way, addr,
+                                 jnp.int32(t), jnp.ones((R,), bool))
+    addr = np.asarray(data.draw(lines),
+                      np.int32).reshape(g.n_cores, _ZOO_M)
+    is_write = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=R, max_size=R))).reshape(
+            g.n_cores, _ZOO_M)
+    reqs = _request_batch(g, jnp.asarray(addr), jnp.asarray(is_write))
+    return state, reqs
+
+
+def _assert_outcomes_bit_equal(a, b):
+    assert set(a.l1.keys()) == set(b.l1.keys())
+    for k in a.l1:
+        np.testing.assert_array_equal(np.asarray(a.l1[k]),
+                                      np.asarray(b.l1[k]), err_msg=k)
+    assert (a.bypass_fill is None) == (b.bypass_fill is None)
+    for f in a._fields:
+        if f in ("l1", "bypass_fill"):
+            continue
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_victim_zero_ways_never_changes_ata_behavior(data):
+    """A size-0 victim buffer is an exact no-op: the victim policy's
+    round is bit-identical to base ATA on any state and request mix."""
+    state, reqs = _zoo_state_and_reqs(data, victim_ways=0)
+    t = jnp.int32(7)
+    base = AtaPolicy().l1_stage(_ZOO_GEOM, state, reqs, t)
+    vic = VictimPolicy(victim_ways=0).l1_stage(_ZOO_GEOM, state, reqs, t)
+    _assert_outcomes_bit_equal(vic, base)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_ciao_zero_threshold_degenerates_to_private(data):
+    """thrash_threshold=0 disables CIAO entirely: outcome and carried
+    state (thrash counters included) match the private baseline."""
+    state, reqs = _zoo_state_and_reqs(data,
+                                      thrash_lanes=_ZOO_GEOM.n_cores)
+    t = jnp.int32(7)
+    base = PrivatePolicy().l1_stage(_ZOO_GEOM, state, reqs, t)
+    ciao = CiaoPolicy(thrash_threshold=0).l1_stage(_ZOO_GEOM, state,
+                                                   reqs, t)
+    _assert_outcomes_bit_equal(ciao, base)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,205 @@
+"""Contention-policy zoo tests: CIAO throttling + victim tag buffer.
+
+Covers the PR-3 acceptance grid — (private, ata, ciao, victim) x 3
+geometries stacks into two dataflow-family executables, bit-identical
+to per-point ``simulate`` — plus policy behaviour, the degenerate
+configurations (threshold 0 / zero-sized buffer) matching their base
+policies through the full simulator, the ``SweepGrid._validate``
+stack_key dataflow check, and the sensitivity-report subsystem that
+rides the zoo (``repro.core.report``).
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (APPS, PAPER_GEOMETRY, SweepGrid, get_arch,
+                        make_trace, register_arch, registered_archs,
+                        simulate)
+from repro.core import report as sensitivity
+from repro.core.arch import (AtaPolicy, CiaoPolicy, VictimPolicy,
+                             _REGISTRY)
+
+
+def _trace(app, rounds=768, kernel=0):
+    return make_trace(dataclasses.replace(APPS[app], rounds=rounds),
+                      kernel=kernel)
+
+
+def same_result(a, b):
+    return all(x == y or (x != x and y != y)
+               for x, y in zip(tuple(a), tuple(b)))
+
+
+@pytest.fixture
+def temp_arch():
+    """Register policies for one test; always unregister afterwards."""
+    names = []
+
+    def _register(policy):
+        names.append(policy.name)
+        return register_arch(policy, overwrite=True)
+
+    yield _register
+    for n in names:
+        _REGISTRY.pop(n, None)
+
+
+# ---------------------------------------------------------------------------
+# registration + family membership
+# ---------------------------------------------------------------------------
+def test_zoo_registered_with_family_stack_keys():
+    assert "ciao" in registered_archs()
+    assert "victim" in registered_archs()
+    assert get_arch("ciao").stack_key == get_arch("private").stack_key
+    assert get_arch("victim").stack_key == get_arch("ata").stack_key
+    assert get_arch("ciao").track_thrash
+    assert get_arch("victim").victim_ways > 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance grid: 4 archs x 3 geometries, <= 4 executables,
+# bit-identical to per-point simulate()
+# ---------------------------------------------------------------------------
+def test_zoo_grid_stacks_into_two_family_executables():
+    traces = [_trace("HS3D", rounds=256, kernel=k) for k in range(2)]
+    geoms = [PAPER_GEOMETRY,
+             dataclasses.replace(PAPER_GEOMETRY, svc_port=4),
+             dataclasses.replace(PAPER_GEOMETRY, lat_l2=240)]
+    grid = SweepGrid(("private", "ata", "ciao", "victim"), geoms, traces)
+    run = grid.run()
+    assert run.report.n_points == 4 * 3 * 2
+    assert run.report.n_executables <= 4, run.report
+    assert run.report.n_executables == 2, run.report   # 2 families
+    for pt, r in zip(grid.points, run.results):
+        assert same_result(r, simulate(pt.arch, pt.trace, pt.geom)), \
+            (pt.arch, pt.geom.svc_port, pt.geom.lat_l2)
+
+
+# ---------------------------------------------------------------------------
+# policy behaviour on an eviction-heavy (streaming) workload
+# ---------------------------------------------------------------------------
+def test_ciao_throttles_thrashing_lanes():
+    tr = _trace("HS3D")
+    base = simulate("private", tr)
+    ciao = simulate("ciao", tr)
+    # a different policy, not a re-badged private ...
+    assert tuple(ciao) != tuple(base)
+    # ... that protects the L1 from thrashing fills: hit rate up, fill/
+    # write-back NoC traffic down, at (at most) a small deferral cost
+    assert ciao.l1_hit_rate > base.l1_hit_rate
+    assert ciao.noc_flits < 0.95 * base.noc_flits
+    assert ciao.ipc > 0.97 * base.ipc
+
+
+def test_victim_buffer_recovers_evicted_lines():
+    tr = _trace("HS3D")
+    base = simulate("ata", tr)
+    vic = simulate("victim", tr)
+    assert tuple(vic) != tuple(base)
+    # recently evicted lines are served from the buffer: hit rate and
+    # IPC may only improve (up to noise), L2 pressure drops
+    assert vic.l1_hit_rate >= base.l1_hit_rate
+    assert vic.ipc >= 0.98 * base.ipc
+    assert vic.l2_accesses <= base.l2_accesses
+
+
+# ---------------------------------------------------------------------------
+# degenerate configurations == base policies, through the full simulator
+# (the hypothesis variants in test_properties.py check the same at the
+# l1_stage level on random states)
+# ---------------------------------------------------------------------------
+def test_ciao_zero_threshold_degenerates_to_private(temp_arch):
+    temp_arch(CiaoPolicy(name="ciao_off", thrash_threshold=0))
+    tr = _trace("HS3D", rounds=384)
+    assert same_result(simulate("ciao_off", tr), simulate("private", tr))
+
+
+def test_victim_zero_ways_degenerates_to_ata(temp_arch):
+    temp_arch(VictimPolicy(name="victim0", victim_ways=0))
+    tr = _trace("HS3D", rounds=384)
+    assert same_result(simulate("victim0", tr), simulate("ata", tr))
+
+
+# ---------------------------------------------------------------------------
+# SweepGrid._validate rejects stack_key dataflow mismatches
+# ---------------------------------------------------------------------------
+def test_sweep_grid_rejects_stack_key_dataflow_mismatch(temp_arch):
+    @dataclasses.dataclass(frozen=True)
+    class BadStack(AtaPolicy):
+        name: str = "test_bad_stack"
+
+        def l1_stage(self, geom, l1, reqs, t):
+            out = super().l1_stage(geom, l1, reqs, t)
+            # an extra carried state array: a different round dataflow
+            return out._replace(l1=dict(out.l1, extra=jnp.zeros(3)))
+
+    temp_arch(BadStack())
+    traces = [_trace("cfd", rounds=64)]
+    with pytest.raises(ValueError, match="stack_key 'ata'.*test_bad_stack"):
+        SweepGrid(("ata", "test_bad_stack"), None, traces)
+    # alone (its own one-member family) the policy is not rejected here
+    grid = SweepGrid(("test_bad_stack",), None, traces)
+    assert len(grid.points) == 1
+
+
+# ---------------------------------------------------------------------------
+# sensitivity reports + the regression gate
+# ---------------------------------------------------------------------------
+KNOBS = {"hide": (5.0, 10.0)}
+
+
+def test_sensitivity_report_structure_and_markdown(tmp_path):
+    rep = sensitivity.run_sensitivity(
+        app="cfd", archs=("private", "ata"), knobs=KNOBS,
+        kernels_per_app=1, rounds=64)
+    assert rep["schema"] == sensitivity.SCHEMA_VERSION
+    assert len(rep["cells"]) == 2 * 2            # archs x knob values
+    for cell in rep["cells"]:
+        for metric in ("ipc", "l1_hit_rate", "remote_hit_rate"):
+            assert isinstance(cell[metric], float)
+        assert cell["ipc"] > 0
+    # cells agree with per-point simulate through the same aggregation
+    tr = make_trace(dataclasses.replace(APPS["cfd"], rounds=64))
+    base = simulate("ata", tr, PAPER_GEOMETRY)
+    cell = next(c for c in rep["cells"]
+                if c["arch"] == "ata" and c["value"] == 10.0)
+    assert cell["ipc"] == pytest.approx(base.ipc)
+
+    md_path = sensitivity.write_report(str(tmp_path / "rep.json"), rep)
+    again = sensitivity.load_report(str(tmp_path / "rep.json"))
+    assert again == json.loads(json.dumps(rep))  # JSON-clean roundtrip
+    md = open(md_path).read()
+    assert "| knob | value | arch |" in md
+    assert "| hide | 5 | ata |" in md
+
+
+def test_compare_reports_flags_drift_and_executable_growth():
+    rep = sensitivity.run_sensitivity(
+        app="cfd", archs=("private", "ata"), knobs=KNOBS,
+        kernels_per_app=1, rounds=64)
+    assert sensitivity.compare_reports(rep, rep) == []
+
+    drifted = json.loads(json.dumps(rep))
+    drifted["cells"][0]["ipc"] *= 1.2
+    fails = sensitivity.compare_reports(rep, drifted)
+    assert len(fails) == 1 and "IPC drift" in fails[0]
+    # within tolerance passes
+    assert sensitivity.compare_reports(rep, drifted, ipc_rtol=0.25) == []
+
+    grown = json.loads(json.dumps(rep))
+    grown["sweep"]["n_executables"] += 1
+    fails = sensitivity.compare_reports(rep, grown)
+    assert len(fails) == 1 and "executable count grew" in fails[0]
+
+    missing = json.loads(json.dumps(rep))
+    del missing["cells"][-1]
+    assert any("missing" in f
+               for f in sensitivity.compare_reports(rep, missing))
+
+    other_cfg = json.loads(json.dumps(rep))
+    other_cfg["config"]["rounds"] = 128
+    fails = sensitivity.compare_reports(rep, other_cfg)
+    assert len(fails) == 1 and "config mismatch" in fails[0]
