@@ -1,0 +1,69 @@
+"""Multi-tenant fairness: the full policy zoo under 2-app co-scheduling.
+
+The paper evaluates one app at a time; this figure asks the question
+the zoo was built for — **does ATA's advantage survive (or grow) when
+heterogeneous apps fight over one L1 complex?** Three locality
+pairings (``repro.core.report.MIX_PAIRINGS``) —
+
+  cfd+b+tree   high x high inter-core locality
+  cfd+HS3D     a sharer co-run with a streamer (high x low)
+  HS3D+sradv1  both low locality / streaming   (low x low)
+
+— each run through all six registered contention policies
+(``private, remote, decoupled, ata, ciao, victim``) via
+``repro.core.report.mix_grid_run``: one ``SweepGrid`` run covers every
+composed mix *and* every per-slot solo baseline, so mixes bucket by
+trace kind (no per-mix recompilation) and solo points share the
+single-app executables.
+
+Emits per (pairing, arch): weighted speedup (ideal 2.0), unfairness
+(max/min slowdown, ideal 1.0), and the mix IPC; plus the headline
+ata-vs-private weighted-speedup ratio per pairing. The
+machine-readable twin of this sweep is the ``mix`` section of
+``repro.core.report.run_sensitivity`` — ``benchmarks.run
+--report-json`` computes the grid run once and feeds it to both, so
+the mixes are never simulated twice in one invocation.
+"""
+import time
+
+from repro.core.report import MIX_ARCHS, MIX_PAIRINGS, mix_grid_run
+from benchmarks.common import emit
+
+PAIRINGS = MIX_PAIRINGS
+ARCHS = MIX_ARCHS
+
+
+def run(kernels_per_app=1, rounds=None, pairings=None, archs=ARCHS,
+        mix_run=None):
+    """Sweep the zoo over the pairings; returns {(mix_id, arch): WS}.
+
+    ``kernels_per_app`` is accepted for driver uniformity; mixes always
+    co-run each app's canonical calibration kernel (kernel 0).
+    ``mix_run`` reuses an existing ``mix_grid_run`` result (it must
+    match ``pairings``/``archs``/``rounds``).
+    """
+    pairings = tuple(PAIRINGS if pairings is None else pairings)
+    t0 = time.perf_counter()
+    if mix_run is None:
+        mix_run = mix_grid_run(pairings, archs, rounds=rounds)
+    us = (time.perf_counter() - t0) * 1e6
+    n = max(1, len(pairings) * len(archs))
+
+    out = {}
+    for mid, per_arch in mix_run.results.items():
+        for arch, mr in per_arch.items():
+            out[(mid, arch)] = mr.weighted_speedup
+            emit(f"fig_mix.{mid}.{arch}.weighted_speedup", us / n,
+                 f"{mr.weighted_speedup:.3f}")
+            emit(f"fig_mix.{mid}.{arch}.unfairness", us / n,
+                 f"{mr.unfairness:.3f}")
+            emit(f"fig_mix.{mid}.{arch}.ipc", us / n,
+                 f"{mr.shared.ipc:.2f}")
+        if "ata" in per_arch and "private" in per_arch:
+            ratio = (per_arch["ata"].weighted_speedup
+                     / per_arch["private"].weighted_speedup)
+            out[(mid, "ata_vs_private")] = ratio
+            emit(f"fig_mix.{mid}.ata_vs_private_ws", us / n,
+                 f"{ratio:.3f}")
+    emit("fig_mix.executables", 0.0, mix_run.report.n_executables)
+    return out

@@ -6,10 +6,14 @@ serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
 --report-json additionally runs the contention-policy-zoo sensitivity
 sweep (``repro.core.report``: private/ata/ciao/victim over widened
-l1_ways / noc_bw / hide axes) and writes the machine-readable report
-JSON + markdown table to PATH — CI's sharded-sweep-smoke job uploads it
-as an artifact and gates on drift vs the committed baseline
-(``benchmarks/baselines/``, ``scripts/check_bench_regression.py``).
+l1_ways / noc_bw / hide axes) plus the multi-tenant ``mix`` fairness
+section (the full zoo over the hi/hi, hi/lo, lo/lo app pairings) and
+writes the machine-readable report JSON + markdown table to PATH —
+CI's sharded-sweep-smoke job uploads it as an artifact and gates on
+drift vs the committed baseline (``benchmarks/baselines/``,
+``scripts/check_bench_regression.py``; the gate is schema-versioned,
+so a schema-1 baseline still gates the solo cells of a schema-2
+report).
 
 --full uses every per-app kernel (Fig. 9 fidelity); default trims for
 CI speed on the 1-core container. --rounds truncates every trace (CI
@@ -41,8 +45,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     import jax
     from benchmarks import (fig8_ipc, fig9_kernels, fig10_latency,
-                            fig_sweep_geometry, kernel_micro, serving_ata,
-                            table1_landscape)
+                            fig_mix_fairness, fig_sweep_geometry,
+                            kernel_micro, serving_ata, table1_landscape)
     from benchmarks.common import emit
     from repro.core import sweep as sweep_engine
     t0 = time.perf_counter()
@@ -51,6 +55,12 @@ def main() -> None:
     fig10_latency.run(kernels_per_app=k, rounds=args.rounds)
     table1_landscape.run(kernels_per_app=k, rounds=args.rounds)
     fig_sweep_geometry.run(kernels_per_app=k, rounds=args.rounds)
+    # one fairness grid run serves both the figure and (below) the
+    # report's mix section — the mixes are never simulated twice
+    from repro.core.report import mix_grid_run
+    mix_run = mix_grid_run(rounds=args.rounds)
+    fig_mix_fairness.run(kernels_per_app=k, rounds=args.rounds,
+                         mix_run=mix_run)
     wall = time.perf_counter() - t0
     # Sweep-engine perf counters: compile count and wall time make
     # executable-churn regressions visible in CI logs.
@@ -61,12 +71,16 @@ def main() -> None:
         from repro.core import report as sensitivity
         t0 = time.perf_counter()
         rep = sensitivity.run_sensitivity(
-            kernels_per_app=None if args.full else 1, rounds=args.rounds)
+            kernels_per_app=None if args.full else 1, rounds=args.rounds,
+            mix_pairings=sensitivity.MIX_PAIRINGS, mix_run=mix_run)
         md_path = sensitivity.write_report(args.report_json, rep)
         emit("sensitivity.cells", (time.perf_counter() - t0) * 1e6,
              len(rep["cells"]))
         emit("sensitivity.executables", 0.0,
              rep["sweep"]["n_executables"])
+        emit("sensitivity.mix_cells", 0.0, len(rep["mix"]["cells"]))
+        emit("sensitivity.mix_executables", 0.0,
+             rep["mix"]["sweep"]["n_executables"])
         print(f"sensitivity report: {args.report_json} + {md_path}",
               file=sys.stderr)
 

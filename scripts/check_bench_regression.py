@@ -3,11 +3,19 @@
 
 Compares a freshly produced sensitivity report (``benchmarks.run
 --report-json``) against the committed baseline and exits non-zero on
-IPC drift beyond the tolerance or executable-count growth:
+per-cell drift beyond the tolerance (solo IPC; mix weighted speedup
+when both reports carry the ``mix`` section) or executable-count
+growth:
 
     PYTHONPATH=src python scripts/check_bench_regression.py \
         benchmarks/baselines/sensitivity_rounds96.json \
         BENCH_sensitivity.json [--ipc-rtol 0.10]
+
+The report schema is versioned (``repro.core.report.SCHEMA_VERSION``)
+and the gate is forward-compatible: a candidate at a *newer* schema
+(e.g. one that grew the multi-tenant ``mix`` section) is gated on the
+sections the older baseline carries instead of failing on unknown
+keys; a candidate at an older schema than the baseline fails.
 
 To update the baseline after an *intentional* performance or model
 change, regenerate it with the same configuration CI uses and commit:
@@ -33,6 +41,11 @@ def main() -> int:
 
     baseline = load_report(args.baseline)
     candidate = load_report(args.candidate)
+    if candidate.get("schema") != baseline.get("schema"):
+        print(f"note: forward-compatible compare — baseline schema "
+              f"{baseline.get('schema')}, candidate schema "
+              f"{candidate.get('schema')}; gating on the baseline's "
+              "sections only", file=sys.stderr)
     failures = compare_reports(baseline, candidate,
                                ipc_rtol=args.ipc_rtol)
     if failures:

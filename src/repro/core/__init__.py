@@ -9,29 +9,35 @@ Public API:
   ARCHITECTURES               — ("private", "remote", "decoupled", "ata")
   ArchPolicy, register_arch, get_arch, registered_archs — policy plug-in
   ReplacementPolicy           — L1 victim selection (LRU / FIFO / RANDOM)
-  APPS, make_trace            — calibrated workload suite
+  APPS, make_trace            — calibrated workload suite (repro.core.trace)
+  WorkloadMix                 — multi-tenant co-scheduling composer
+  AppStats                    — per-app attribution block on SimResult
   run_app, run_suite, normalized_ipc — experiment drivers
+  MixResult, run_mixes        — fairness metrics over co-scheduled mixes
 """
 from repro.core.geometry import (GeomScalars, GeomStructure, GpuGeometry,
                                  PAPER_GEOMETRY, split_geometry)
-from repro.core.simulator import (ARCHITECTURES, SimResult, Trace, simulate,
-                                  simulate_batch, simulate_many)
+from repro.core.simulator import (ARCHITECTURES, AppStats, SimResult, Trace,
+                                  simulate, simulate_batch, simulate_many,
+                                  trace_kind)
 from repro.core.sweep import SweepGrid, SweepPoint, SweepReport, SweepRun
 from repro.core.arch import (ArchPolicy, L1Outcome, RequestBatch, get_arch,
                              register_arch, registered_archs)
 from repro.core.tagarray import ReplacementPolicy
-from repro.core.workloads import (APPS, HIGH_LOCALITY, LOW_LOCALITY,
-                                  AppParams, make_trace)
-from repro.core.metrics import (AppResult, app_traces, geomean,
-                                normalized_ipc, run_app, run_suite)
+from repro.core.trace import (APPS, HIGH_LOCALITY, LOW_LOCALITY, AppParams,
+                              WorkloadMix, kernel_params, make_trace)
+from repro.core.metrics import (AppResult, MixResult, MixRun, app_traces,
+                                geomean, normalized_ipc, run_app, run_mixes,
+                                run_suite)
 
 __all__ = [
     "GpuGeometry", "PAPER_GEOMETRY", "GeomStructure", "GeomScalars",
-    "split_geometry", "ARCHITECTURES", "SimResult", "Trace",
-    "simulate", "simulate_batch", "simulate_many", "SweepGrid", "SweepPoint",
-    "SweepReport", "SweepRun", "ArchPolicy", "L1Outcome",
+    "split_geometry", "ARCHITECTURES", "SimResult", "AppStats", "Trace",
+    "trace_kind", "simulate", "simulate_batch", "simulate_many", "SweepGrid",
+    "SweepPoint", "SweepReport", "SweepRun", "ArchPolicy", "L1Outcome",
     "RequestBatch", "get_arch", "register_arch", "registered_archs",
     "ReplacementPolicy", "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
-    "make_trace", "AppResult", "app_traces", "geomean", "normalized_ipc",
-    "run_app", "run_suite",
+    "WorkloadMix", "kernel_params", "make_trace", "AppResult", "app_traces",
+    "geomean", "normalized_ipc", "run_app", "run_suite", "MixResult",
+    "MixRun", "run_mixes",
 ]

@@ -7,18 +7,26 @@ architectures into shared executables, batches the trace axis, and
 shards the stacked points across the host's devices — one compilation
 per (arch dataflow group, trace shape) instead of one ``jax.jit`` trace
 per kernel, and one device dispatch per bucket.
+
+``run_mixes`` extends the same pattern to multi-tenant co-scheduling:
+every composed :class:`~repro.core.trace.WorkloadMix` trace plus every
+per-slot solo baseline goes into one grid run, and
+:class:`MixResult` turns the per-app attribution into the fairness
+metrics (weighted speedup, unfairness) the serving-domain scenarios
+need.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+from typing import (Dict, Iterable, List, NamedTuple, Optional,
+                    Sequence)
 
 import numpy as np
 
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
 from repro.core.simulator import ARCHITECTURES, SimResult, Trace
-from repro.core.sweep import SweepGrid, SweepPoint
-from repro.core.workloads import APPS, AppParams, make_trace
+from repro.core.sweep import SweepGrid, SweepPoint, SweepReport
+from repro.core.trace import APPS, AppParams, WorkloadMix, make_trace
 
 
 def _nanmean(values: Iterable[float]) -> float:
@@ -150,6 +158,114 @@ def run_suite(apps: Optional[Iterable[str]] = None,
     return {app: {arch: AppResult(app, arch, results[(app, arch)])
                   for arch in archs}
             for app in apps}
+
+
+@dataclasses.dataclass
+class MixResult:
+    """Fairness summary of one (mix, arch) co-scheduling run.
+
+    ``shared`` is the composed-trace run (its ``per_app`` block carries
+    the attribution); ``solo`` holds one full-machine baseline run per
+    mix slot over the *same* sliced/staggered addresses
+    (:meth:`WorkloadMix.component_traces`), so the slowdowns below
+    measure interference, not address-map artifacts.
+
+    Because a slot owns only ``k_i`` of the machine's ``C`` cores while
+    its solo baseline runs on all ``C``, speedups compare *per-core*
+    IPC: ``slowdown_i = (solo_ipc_i / C) / (shared_ipc_i / k_i)``.
+    ``weighted_speedup`` is then the summed normalized progress
+    ``Σ 1/slowdown_i`` (ideal = n_apps, the classic Snavely–Tullsen
+    weighted speedup over machine-share-normalized rates), and
+    ``unfairness`` is ``max slowdown / min slowdown`` (ideal = 1)
+    [MASK, arXiv 1708.04911].
+    """
+    mix: WorkloadMix
+    arch: str
+    shared: SimResult
+    solo: List[SimResult]
+
+    @property
+    def n_cores(self) -> int:
+        return sum(a.cores for a in self.shared.per_app)
+
+    @property
+    def per_app_ipc(self) -> List[float]:
+        return [a.ipc for a in self.shared.per_app]
+
+    @property
+    def per_app_l1_hit_rate(self) -> List[float]:
+        return [a.l1_hit_rate for a in self.shared.per_app]
+
+    @property
+    def slowdowns(self) -> List[float]:
+        C = self.n_cores
+        out = []
+        for a, s in zip(self.shared.per_app, self.solo):
+            shared_per_core = a.ipc / a.cores
+            solo_per_core = s.ipc / C
+            out.append(solo_per_core / shared_per_core)
+        return out
+
+    @property
+    def weighted_speedup(self) -> float:
+        return float(sum(1.0 / s for s in self.slowdowns))
+
+    @property
+    def unfairness(self) -> float:
+        sd = self.slowdowns
+        return float(max(sd) / min(sd))
+
+
+class MixRun(NamedTuple):
+    """``run_mixes`` output: results plus the grid's accounting."""
+    results: Dict[str, Dict[str, MixResult]]   # {mix_id: {arch: ...}}
+    report: SweepReport
+
+
+def run_mixes(mixes: Sequence[WorkloadMix],
+              archs: Iterable[str] = ARCHITECTURES,
+              geom: GpuGeometry = PAPER_GEOMETRY,
+              rounds: Optional[int] = None,
+              seed: int = 0,
+              n_devices: Optional[int] = None) -> MixRun:
+    """Sweep (mix x arch) with solo baselines in *one* grid run.
+
+    Every composed mix trace and every per-slot solo baseline trace of
+    every architecture goes into a single :class:`SweepGrid` run: solo
+    points share the ordinary single-app executables, mix points bucket
+    by (dataflow group, trace kind) — no per-mix recompilation.
+    """
+    archs = tuple(archs)
+    if rounds is not None:
+        mixes = [dataclasses.replace(m, rounds=rounds) for m in mixes]
+    mixes = list(mixes)
+    ids = [m.mix_id for m in mixes]
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"duplicate mix ids in {ids}")
+
+    points: List[SweepPoint] = []
+    owners: List[tuple] = []
+    for mix, mid in zip(mixes, ids):
+        shared = mix.compose(geom.n_cores, seed=seed)
+        comps = mix.component_traces(geom.n_cores, seed=seed)
+        for arch in archs:
+            points.append(SweepPoint(arch, geom, shared))
+            owners.append(("shared", mid, arch))
+            for tr in comps:
+                points.append(SweepPoint(arch, geom, tr))
+                owners.append(("solo", mid, arch))
+    run = SweepGrid.from_points(points).run(n_devices=n_devices)
+
+    grouped: Dict[tuple, List[SimResult]] = {}
+    for key, r in zip(owners, run.results):
+        grouped.setdefault(key, []).append(r)
+    results = {
+        mid: {arch: MixResult(mix, arch,
+                              shared=grouped[("shared", mid, arch)][0],
+                              solo=grouped[("solo", mid, arch)])
+              for arch in archs}
+        for mix, mid in zip(mixes, ids)}
+    return MixRun(results=results, report=run.report)
 
 
 def normalized_ipc(suite: Dict[str, Dict[str, AppResult]],

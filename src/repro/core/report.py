@@ -20,6 +20,18 @@ The report doubles as CI's benchmark-regression gate:
 baseline and flags per-cell IPC drift beyond a tolerance or
 executable-count growth (``scripts/check_bench_regression.py`` is the
 thin CLI; the sharded-sweep-smoke workflow job runs it on every PR).
+
+Schema history (``SCHEMA_VERSION``):
+
+  1  solo policy-zoo cells only (``config``/``sweep``/``cells``)
+  2  adds the multi-tenant ``mix`` section (its own config/sweep/cells
+     from :func:`run_mix_sensitivity`); solo sections unchanged
+
+The gate is *forward-compatible*: a candidate at a newer schema is
+compared against an older baseline on the sections the baseline
+carries (solo cells, solo executable count, baseline config keys), so
+committing a new report section never breaks the gate against an old
+baseline — only drift in shared cells does.
 """
 from __future__ import annotations
 
@@ -29,10 +41,12 @@ import os
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
-from repro.core.metrics import AppResult, app_traces, kernel_range
+from repro.core.metrics import (AppResult, MixRun, app_traces,
+                                kernel_range, run_mixes)
 from repro.core.sweep import SweepGrid, SweepPoint
+from repro.core.trace import WorkloadMix
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: The zoo comparison set: the paper's poles, the probe-broadcast
 #: baseline (the only ``noc_bw`` consumer), and both new policies.
@@ -50,6 +64,79 @@ SENSITIVITY_KNOBS: Dict[str, Tuple] = {
 CELL_METRICS = ("ipc", "l1_hit_rate", "remote_hit_rate", "noc_flits",
                 "l1_latency")
 
+#: The full zoo for the multi-tenant fairness sweep.
+MIX_ARCHS: Tuple[str, ...] = ("private", "remote", "decoupled", "ata",
+                              "ciao", "victim")
+
+#: Locality pairings: high x high, high x low, low x low.
+MIX_PAIRINGS: Tuple[Tuple[str, str], ...] = (
+    ("cfd", "b+tree"), ("cfd", "HS3D"), ("HS3D", "sradv1"))
+
+
+def mix_grid_run(pairings: Sequence[Tuple[str, ...]] = MIX_PAIRINGS,
+                 archs: Sequence[str] = MIX_ARCHS,
+                 rounds: Optional[int] = None,
+                 geom: GpuGeometry = PAPER_GEOMETRY,
+                 n_devices: Optional[int] = None) -> MixRun:
+    """The canonical (pairing x zoo-arch) fairness grid run.
+
+    One :func:`repro.core.metrics.run_mixes` call over
+    ``WorkloadMix(apps=pair)`` per pairing — shared by
+    :func:`run_mix_sensitivity` and ``benchmarks/fig_mix_fairness``
+    (``benchmarks.run --report-json`` computes it once and feeds both).
+    """
+    mixes = [WorkloadMix(apps=tuple(p)) for p in pairings]
+    return run_mixes(mixes, tuple(archs), geom=geom, rounds=rounds,
+                     n_devices=n_devices)
+
+
+def run_mix_sensitivity(pairings: Sequence[Tuple[str, ...]] = MIX_PAIRINGS,
+                        archs: Sequence[str] = MIX_ARCHS,
+                        rounds: Optional[int] = None,
+                        geom: GpuGeometry = PAPER_GEOMETRY,
+                        n_devices: Optional[int] = None,
+                        mix_run: Optional[MixRun] = None) -> dict:
+    """The multi-tenant ``mix`` report section: fairness of the zoo.
+
+    One :func:`repro.core.metrics.run_mixes` grid run over
+    (pairing x arch), reporting weighted speedup, unfairness, mix IPC,
+    and per-app IPC / L1 hit rate per cell, plus the grid's own
+    executable accounting (kept separate from the solo sweep's so the
+    solo regression gate is unaffected by this section existing).
+    ``mix_run`` reuses an existing :func:`mix_grid_run` result — it
+    must have been produced from the same pairings/archs/rounds.
+    """
+    archs = tuple(archs)
+    run = mix_run if mix_run is not None else mix_grid_run(
+        pairings, archs, rounds=rounds, geom=geom, n_devices=n_devices)
+    cells = []
+    for mid, per_arch in run.results.items():
+        for arch, mr in per_arch.items():
+            cells.append({
+                "mix": mid, "arch": arch,
+                "weighted_speedup": float(mr.weighted_speedup),
+                "unfairness": float(mr.unfairness),
+                "ipc": float(mr.shared.ipc),
+                "per_app_ipc": [float(x) for x in mr.per_app_ipc],
+                "per_app_l1_hit_rate": [float(x)
+                                        for x in mr.per_app_l1_hit_rate],
+            })
+    return {
+        "config": {
+            "pairings": [list(p) for p in pairings],
+            "archs": list(archs),
+            "rounds": rounds,
+        },
+        "sweep": {
+            "n_points": run.report.n_points,
+            "n_executables": run.report.n_executables,
+            "n_compiles": run.report.n_compiles,
+            "n_devices": run.report.n_devices,
+            "wall_s": round(run.report.wall_s, 3),
+        },
+        "cells": cells,
+    }
+
 
 def run_sensitivity(app: str = "HS3D",
                     archs: Sequence[str] = SENSITIVITY_ARCHS,
@@ -57,8 +144,19 @@ def run_sensitivity(app: str = "HS3D",
                     kernels_per_app: Optional[int] = 1,
                     rounds: Optional[int] = None,
                     geom: GpuGeometry = PAPER_GEOMETRY,
-                    n_devices: Optional[int] = None) -> dict:
-    """One grid run over (arch x knob-value x kernel); report dict out."""
+                    n_devices: Optional[int] = None,
+                    mix_pairings: Optional[Sequence[Tuple[str, ...]]]
+                    = None,
+                    mix_run: Optional[MixRun] = None) -> dict:
+    """One grid run over (arch x knob-value x kernel); report dict out.
+
+    ``mix_pairings`` (e.g. ``MIX_PAIRINGS``) adds the multi-tenant
+    ``mix`` section (schema 2; ``benchmarks.run --report-json`` passes
+    it, with ``mix_run`` reusing the grid run the fairness figure
+    already paid for) — the solo sections are unchanged either way and
+    keep their own ``sweep`` accounting, so a schema-1 baseline still
+    gates them.
+    """
     knobs = dict(SENSITIVITY_KNOBS if knobs is None else knobs)
     archs = tuple(archs)
     traces = app_traces(app, geom, kernel_range(app, kernels_per_app),
@@ -90,8 +188,12 @@ def run_sensitivity(app: str = "HS3D",
             cell[metric] = float(getattr(agg, metric))
         cells.append(cell)
 
-    return {
-        "schema": SCHEMA_VERSION,
+    report = {
+        # The schema tag reflects the sections actually present: a
+        # solo-only report is (and gates as) schema 1, so a baseline
+        # regenerated without mixes can never silently claim mix
+        # coverage while un-gating it.
+        "schema": SCHEMA_VERSION if mix_pairings else 1,
         "config": {
             "app": app,
             "archs": list(archs),
@@ -108,6 +210,11 @@ def run_sensitivity(app: str = "HS3D",
         },
         "cells": cells,
     }
+    if mix_pairings:
+        report["mix"] = run_mix_sensitivity(
+            mix_pairings, rounds=rounds, geom=geom, n_devices=n_devices,
+            mix_run=mix_run)
+    return report
 
 
 def to_markdown(report: dict) -> str:
@@ -129,6 +236,25 @@ def to_markdown(report: dict) -> str:
             f"| {c['knob']} | {c['value']:g} | {c['arch']} "
             f"| {c['ipc']:.3f} | {c['l1_hit_rate']:.4f} "
             f"| {c['remote_hit_rate']:.4f} | {c['noc_flits']:.0f} |")
+    mix = report.get("mix")
+    if mix:
+        lines += [
+            "",
+            "## Multi-tenant fairness (weighted speedup ideal = 2, "
+            "unfairness ideal = 1)",
+            "",
+            f"pairings: "
+            f"{', '.join('x'.join(p) for p in mix['config']['pairings'])}"
+            f" · executables: {mix['sweep']['n_executables']}",
+            "",
+            "| mix | arch | weighted speedup | unfairness | mix IPC |",
+            "|---|---|---|---|---|",
+        ]
+        for c in mix["cells"]:
+            lines.append(
+                f"| {c['mix']} | {c['arch']} "
+                f"| {c['weighted_speedup']:.3f} | {c['unfairness']:.3f} "
+                f"| {c['ipc']:.2f} |")
     return "\n".join(lines) + "\n"
 
 
@@ -156,42 +282,78 @@ def _cell_key(cell: dict) -> tuple:
     return (cell["arch"], cell["knob"], cell["value"])
 
 
-def compare_reports(baseline: dict, candidate: dict, *,
-                    ipc_rtol: float = 0.10) -> List[str]:
-    """Regression-gate diff; returns human-readable failure strings.
+def _mix_cell_key(cell: dict) -> tuple:
+    return (cell["mix"], cell["arch"])
 
-    Fails on: schema/config mismatch (the runs are not comparable),
-    missing cells, per-cell IPC drift beyond ``ipc_rtol`` in *either*
-    direction (improvements require a conscious baseline update too),
-    and executable-count growth (compile-count regressions).
-    """
-    failures: List[str] = []
-    if baseline.get("schema") != candidate.get("schema"):
-        return [f"schema mismatch: baseline {baseline.get('schema')} "
-                f"vs candidate {candidate.get('schema')}"]
-    if baseline["config"] != candidate["config"]:
-        return [f"config mismatch — reports are not comparable: "
-                f"baseline {baseline['config']} "
-                f"vs candidate {candidate['config']}"]
 
+def _compare_section(failures: List[str], baseline: dict, candidate: dict,
+                     *, key_fn, metric: str, metric_label: str,
+                     rtol: float, label: str) -> None:
+    """Shared cell-diff logic for the solo and mix sections."""
     base_exec = baseline["sweep"]["n_executables"]
     cand_exec = candidate["sweep"]["n_executables"]
     if cand_exec > base_exec:
         failures.append(
-            f"executable count grew: {base_exec} -> {cand_exec} "
+            f"{label} executable count grew: {base_exec} -> {cand_exec} "
             "(policy stacking / geometry batching regression)")
-
-    cand_cells = {_cell_key(c): c for c in candidate["cells"]}
+    cand_cells = {key_fn(c): c for c in candidate["cells"]}
     for base_cell in baseline["cells"]:
-        key = _cell_key(base_cell)
+        key = key_fn(base_cell)
         cell = cand_cells.get(key)
         if cell is None:
-            failures.append(f"cell missing from candidate: {key}")
+            failures.append(f"{label} cell missing from candidate: {key}")
             continue
-        base_ipc, cand_ipc = base_cell["ipc"], cell["ipc"]
-        drift = abs(cand_ipc - base_ipc) / abs(base_ipc)
-        if drift > ipc_rtol:
+        base_v, cand_v = base_cell[metric], cell[metric]
+        drift = abs(cand_v - base_v) / abs(base_v)
+        if drift > rtol:
             failures.append(
-                f"IPC drift {drift:+.1%} beyond ±{ipc_rtol:.0%} at "
-                f"{key}: {base_ipc:.3f} -> {cand_ipc:.3f}")
+                f"{label} {metric_label} drift {drift:+.1%} beyond "
+                f"±{rtol:.0%} at {key}: {base_v:.3f} -> {cand_v:.3f}")
+
+
+def compare_reports(baseline: dict, candidate: dict, *,
+                    ipc_rtol: float = 0.10) -> List[str]:
+    """Regression-gate diff; returns human-readable failure strings.
+
+    Fails on: schema *downgrade* or config mismatch (the runs are not
+    comparable), missing cells, per-cell IPC drift beyond ``ipc_rtol``
+    in *either* direction (improvements require a conscious baseline
+    update too), and executable-count growth (compile-count
+    regressions) — per section.
+
+    Schema compatibility: a candidate at a **newer** schema than the
+    baseline is legal — the gate compares the sections and config keys
+    the baseline carries and ignores candidate-only additions (e.g. a
+    schema-1 baseline gates a schema-2 candidate on its solo cells and
+    tolerates the new ``mix`` section). The ``mix`` section is gated
+    (on ``weighted_speedup`` drift and its own executable count) only
+    when both reports carry it.
+    """
+    failures: List[str] = []
+    base_schema = baseline.get("schema")
+    cand_schema = candidate.get("schema")
+    if base_schema is None or cand_schema is None \
+            or cand_schema < base_schema:
+        return [f"schema mismatch: baseline {base_schema} "
+                f"vs candidate {cand_schema} (candidate must be at the "
+                "baseline's schema or newer)"]
+    for key, value in baseline["config"].items():
+        if candidate["config"].get(key) != value:
+            return [f"config mismatch — reports are not comparable: "
+                    f"baseline {baseline['config']} "
+                    f"vs candidate {candidate['config']}"]
+
+    _compare_section(failures, baseline, candidate, key_fn=_cell_key,
+                     metric="ipc", metric_label="IPC", rtol=ipc_rtol,
+                     label="solo")
+    if "mix" in baseline:
+        if "mix" not in candidate:
+            failures.append("mix section missing from candidate "
+                            "(baseline carries one)")
+        else:
+            _compare_section(failures, baseline["mix"], candidate["mix"],
+                             key_fn=_mix_cell_key,
+                             metric="weighted_speedup",
+                             metric_label="weighted-speedup",
+                             rtol=ipc_rtol, label="mix")
     return failures

@@ -32,6 +32,14 @@ grid) costs one compilation instead of one ``jax.jit`` trace per kernel;
 *architecture* and *geometry* axes too and shard the stacked axis over
 devices.
 
+Multi-tenant traces (``repro.core.trace.mix.WorkloadMix``) carry a
+``core_app`` app-id channel and a per-core instruction-intensity
+vector; the round accumulates hit/timing counters per app id inside
+the scan carry and :func:`_summarize` folds them into
+``SimResult.per_app`` (:class:`AppStats`). The app count is the only
+new static dimension (:func:`trace_kind`), so same-shape mixes share
+executables and solo traces keep exactly their pre-mix ones.
+
 Geometry timing scalars are traced (``GeomScalars``), and a *group* of
 same-dataflow architectures is compiled into one executable with the
 active policy selected by a traced index (``lax.switch`` over the
@@ -41,7 +49,7 @@ per-round step), so an executable is keyed only by
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, NamedTuple, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +69,163 @@ from repro.core.geometry import (GEOM_SCALAR_FIELDS, GeomScalars,
 ARCHITECTURES = PAPER_ARCHITECTURES
 
 
-class Trace(NamedTuple):
+class _TraceBase(NamedTuple):
     addr: np.ndarray       # (T, C, m) int32 line addresses
     is_write: np.ndarray   # (T, C, m) bool
-    insn_per_req: float    # non-memory instructions amortized per request
+    #: non-memory instructions amortized per request — a scalar, or a
+    #: (C,) float32 vector for multi-app mixes (per-core intensity)
+    insn_per_req: Union[float, np.ndarray]
+    #: (C,) int32 app id per core (multi-tenant mixes), or None — the
+    #: canonical single-app trace (all cores app 0)
+    core_app: Optional[np.ndarray] = None
+
+
+class Trace(_TraceBase):
+    """A request trace with strict dtype validation at the boundary.
+
+    The simulator treats ``addr``/``is_write`` dtypes and the
+    ``insn_per_req``/``core_app`` *shapes* as part of the executable
+    key, so a hand-built trace that silently promoted ``addr`` to int64
+    or ``is_write`` to int8 would either fail deep inside jit or double
+    the compiled-executable count. Validation therefore happens here —
+    at construction — not only inside ``make_trace``:
+
+    * ``addr`` must already be int32 (use
+      ``repro.core.trace.generators._require_int32`` to narrow safely);
+    * ``is_write`` must be bool and shape-match ``addr``;
+    * ``insn_per_req`` may be a python scalar or a (C,) vector; a
+      uniform vector collapses to its scalar so single-app traces keep
+      their executable regardless of how they were built;
+    * ``core_app`` ids must be dense (every id in ``0..n_apps-1``
+      assigned to at least one core); a single-app assignment collapses
+      to ``None``, the canonical solo form.
+    """
+    __slots__ = ()
+
+    def __new__(cls, addr, is_write, insn_per_req, core_app=None):
+        addr = np.asarray(addr)
+        if addr.dtype != np.int32:
+            raise ValueError(
+                f"Trace.addr must be int32, got {addr.dtype}; narrow "
+                "explicitly (repro.core.trace.generators._require_int32 "
+                "checks for overflow)")
+        if addr.ndim != 3:
+            raise ValueError(
+                f"Trace.addr must be (rounds, cores, m), got {addr.shape}")
+        is_write = np.asarray(is_write)
+        if is_write.dtype != np.bool_:
+            raise ValueError(
+                f"Trace.is_write must be bool, got {is_write.dtype}")
+        if is_write.shape != addr.shape:
+            raise ValueError(
+                f"Trace.is_write shape {is_write.shape} != addr shape "
+                f"{addr.shape}")
+        C = addr.shape[1]
+        if np.ndim(insn_per_req) == 0:
+            insn_per_req = float(insn_per_req)
+        else:
+            v = np.asarray(insn_per_req, np.float32)
+            if v.shape != (C,):
+                raise ValueError(
+                    f"Trace.insn_per_req must be a scalar or ({C},) "
+                    f"per-core vector, got shape {v.shape}")
+            if np.all(v == v[0]):
+                insn_per_req = float(v[0])   # canonical scalar form
+            else:
+                insn_per_req = v
+        if core_app is not None:
+            ca = np.asarray(core_app)
+            if not np.issubdtype(ca.dtype, np.integer):
+                raise ValueError(
+                    f"Trace.core_app must be integer app ids, got "
+                    f"{ca.dtype}")
+            if ca.shape != (C,):
+                raise ValueError(
+                    f"Trace.core_app must be ({C},) — one app id per "
+                    f"core — got shape {ca.shape}")
+            ids = np.unique(ca)
+            if ids[0] != 0 or ids[-1] != ids.size - 1:
+                raise ValueError(
+                    "Trace.core_app ids must be dense 0..n_apps-1 "
+                    f"(every app owns at least one core), got {ids.tolist()}")
+            core_app = None if ids.size == 1 else ca.astype(np.int32)
+        return super().__new__(cls, addr, is_write, insn_per_req, core_app)
+
+    def _replace(self, **kwds) -> "Trace":
+        """Route through ``__new__`` so replaced traces re-validate.
+
+        The inherited ``NamedTuple._replace`` builds via
+        ``tuple.__new__`` and would silently skip the strict boundary
+        checks (an int64 ``addr`` smuggled in this way would later be
+        wrapped by ``jnp.asarray(..., int32)`` — exactly the corruption
+        the validation exists to prevent).
+        """
+        fields = self._asdict()
+        fields.update(kwds)
+        return Trace(**fields)
+
+    @property
+    def n_cores(self) -> int:
+        return self.addr.shape[1]
+
+    @property
+    def n_apps(self) -> int:
+        """Number of co-scheduled apps (1 for the canonical solo form)."""
+        return 1 if self.core_app is None else int(self.core_app.max()) + 1
+
+    @property
+    def core_app_ids(self) -> np.ndarray:
+        """(C,) int32 app id per core; zeros for the solo form."""
+        if self.core_app is None:
+            return np.zeros((self.n_cores,), np.int32)
+        return self.core_app
+
+    @property
+    def insn_vector(self) -> np.ndarray:
+        """(C,) float64 per-core instruction intensity."""
+        if np.ndim(self.insn_per_req) == 0:
+            return np.full((self.n_cores,), float(self.insn_per_req))
+        return np.asarray(self.insn_per_req, np.float64)
+
+
+class AppStats(NamedTuple):
+    """Per-app attribution slice of one simulation (raw counters).
+
+    Raw sums only — never NaN — so nested tuple equality between the
+    grid and per-point paths stays exact; ratios are derived
+    properties (``l1_latency`` is NaN when no load of this app was ever
+    fully served inside the L1 complex, mirroring ``SimResult``).
+    """
+    app: int            # dense app id (mix slot)
+    cores: int          # cores assigned to this app
+    instructions: float
+    cycles: float       # completion time: max over the app's cores
+    requests: float
+    local_hits: float
+    remote_hits: float
+    l1_lat_sum: float
+    l1_lat_n: float
+
+    @property
+    def ipc(self) -> float:
+        return self.instructions / self.cycles
+
+    @property
+    def local_hit_rate(self) -> float:
+        return self.local_hits / self.requests
+
+    @property
+    def remote_hit_rate(self) -> float:
+        return self.remote_hits / self.requests
+
+    @property
+    def l1_hit_rate(self) -> float:
+        return (self.local_hits + self.remote_hits) / self.requests
+
+    @property
+    def l1_latency(self) -> float:
+        return self.l1_lat_sum / self.l1_lat_n if self.l1_lat_n \
+            else float("nan")
 
 
 class SimResult(NamedTuple):
@@ -78,6 +239,9 @@ class SimResult(NamedTuple):
     noc_flits: float
     cycles: float
     instructions: float
+    #: per-app attribution (one AppStats per mix slot; a single entry
+    #: covering every core for solo traces)
+    per_app: Tuple[AppStats, ...] = ()
 
 
 def _l1_state(geom, policies: Sequence[ArchPolicy]) -> tagarray.TagState:
@@ -117,12 +281,14 @@ def _request_batch(geom, addr, is_write) -> RequestBatch:
                         set_idx=set_idx, bank=bank, peers=peers)
 
 
-def _round(policy: ArchPolicy, geom, insn_per_req, state, xs):
+def _round(policy: ArchPolicy, geom, insn_per_req, core_app, state, xs):
     """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write).
 
     ``geom`` is a :class:`TracedGeometry` view (or a concrete
     ``GpuGeometry``): structure fields are static, timing scalars may be
-    tracers.
+    tracers. ``insn_per_req`` is a scalar or (C,) vector; ``core_app``
+    is the (C,) int32 app-id channel feeding the per-app attribution
+    scatter-adds (all zeros for solo traces).
     """
     l1, l2, t, stats = state
     addr, is_write = xs                      # (C, m)
@@ -179,10 +345,16 @@ def _round(policy: ArchPolicy, geom, insn_per_req, state, xs):
     all_served = out.served.reshape(C, m).all(axis=1)
     l1_complete = out.l1_time.reshape(C, m).max(axis=1)
 
+    # Per-app attribution: hit counters scatter-add by the issuing
+    # core's app id inside the existing carry (hit counts are small
+    # integers in float32 — exact regardless of accumulation order).
+    req_app = core_app[reqs.core]                               # (R,)
+    f32 = jnp.float32
+    app_served_lat = jnp.where(all_served, l1_complete, 0.0)    # (C,)
+
     stats = {
         "cycles": stats["cycles"] + round_cost,
-        "l1_lat_sum": stats["l1_lat_sum"]
-        + jnp.sum(jnp.where(all_served, l1_complete, 0.0)),
+        "l1_lat_sum": stats["l1_lat_sum"] + jnp.sum(app_served_lat),
         "l1_lat_n": stats["l1_lat_n"] + jnp.sum(all_served),
         "local_hits": stats["local_hits"] + jnp.sum(out.local_hits),
         "remote_hits": stats["remote_hits"] + jnp.sum(out.remote_hits),
@@ -190,35 +362,49 @@ def _round(policy: ArchPolicy, geom, insn_per_req, state, xs):
         "l2_accesses": stats["l2_accesses"] + jnp.sum(go_l2),
         "dram": stats["dram"] + jnp.sum(go_l2 & ~l2_hit),
         "noc_flits": stats["noc_flits"] + noc_flits,
+        "app_local": stats["app_local"]
+        .at[req_app].add(out.local_hits.astype(f32)),
+        "app_remote": stats["app_remote"]
+        .at[req_app].add(out.remote_hits.astype(f32)),
+        "app_lat_sum": stats["app_lat_sum"]
+        .at[core_app].add(app_served_lat),
+        "app_lat_n": stats["app_lat_n"]
+        .at[core_app].add(all_served.astype(f32)),
     }
     return (l1, l2, t + 1, stats), None
 
 
-def _init_stats(geom) -> Dict[str, jnp.ndarray]:
+def _init_stats(geom, n_apps: int = 1) -> Dict[str, jnp.ndarray]:
     z = jnp.float32(0.0)
+    app = jnp.zeros((n_apps,), jnp.float32)
     return {"cycles": jnp.zeros((geom.n_cores,), jnp.float32),
             "l1_lat_sum": z, "l1_lat_n": z, "local_hits": z,
             "remote_hits": z, "requests": z, "l2_accesses": z,
-            "dram": z, "noc_flits": z}
+            "dram": z, "noc_flits": z,
+            "app_local": app, "app_remote": app,
+            "app_lat_sum": app, "app_lat_n": app}
 
 
 def _sim_core(archs: Tuple[str, ...], point_arrays,
-              structure: GeomStructure):
+              structure: GeomStructure, n_apps: int = 1):
     """Scan one grid point through the round pipeline.
 
     ``archs`` is a *dataflow group*: one or more same-dataflow
     architectures compiled together, the active one selected per point
     by the traced ``policy_idx`` (``lax.switch`` over the round step).
-    ``point_arrays = (addr, is_write, insn_per_req, scalars,
-    policy_idx)`` — everything but ``archs``/``structure`` is traced, so
-    one executable serves whole (policy, timing-geometry, trace) grids.
+    ``point_arrays = (addr, is_write, insn_per_req, core_app, scalars,
+    policy_idx)`` — everything but ``archs``/``structure``/``n_apps``
+    is traced, so one executable serves whole (policy, timing-geometry,
+    trace) grids; ``n_apps`` sizes the per-app attribution accumulators
+    (static — mixes with the same app count share executables).
     """
-    addr, is_write, insn_per_req, scalars, policy_idx = point_arrays
+    addr, is_write, insn_per_req, core_app, scalars, policy_idx = \
+        point_arrays
     geom = TracedGeometry(structure, scalars)
     policies = [get_arch(a) for a in archs]
     state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
-             _init_stats(geom))
-    steps = [functools.partial(_round, p, geom, insn_per_req)
+             _init_stats(geom, n_apps))
+    steps = [functools.partial(_round, p, geom, insn_per_req, core_app)
              for p in policies]
     if len(steps) == 1:
         step = steps[0]
@@ -229,26 +415,42 @@ def _sim_core(archs: Tuple[str, ...], point_arrays,
     return stats
 
 
-#: One compilation per (arch group, trace shape, geometry structure).
-_simulate = jax.jit(_sim_core, static_argnums=(0, 2))
+#: One compilation per (arch group, trace shape, geometry structure,
+#: app count).
+_simulate = jax.jit(_sim_core, static_argnums=(0, 2, 3))
 
 #: Batched form: vmap over a leading grid-point axis, still one
 #: compilation. ``repro.core.sweep`` adds device sharding on top.
 _simulate_batch = jax.jit(
-    lambda archs, point_arrays, structure: jax.vmap(
-        lambda pa: _sim_core(archs, pa, structure))(point_arrays),
-    static_argnums=(0, 2))
+    lambda archs, point_arrays, structure, n_apps: jax.vmap(
+        lambda pa: _sim_core(archs, pa, structure, n_apps))(point_arrays),
+    static_argnums=(0, 2, 3))
+
+
+def _trace_arrays(trace: Trace):
+    """One trace's traced leaves: (addr, is_write, insn, core_app)."""
+    addr = jnp.asarray(trace.addr, jnp.int32)
+    is_write = jnp.asarray(trace.is_write, bool)
+    if np.ndim(trace.insn_per_req) == 0:
+        insn = jnp.float32(trace.insn_per_req)
+    else:
+        insn = jnp.asarray(trace.insn_per_req, jnp.float32)
+    core_app = jnp.asarray(trace.core_app_ids, jnp.int32)
+    return addr, is_write, insn, core_app
 
 
 def _point_arrays(trace_like, scalars, policy_idx=0):
     """Pack one grid point's traced leaves for :func:`_sim_core`."""
-    addr, is_write, insn = trace_like
-    return (addr, is_write, insn, scalars, jnp.int32(policy_idx))
+    addr, is_write, insn, core_app = trace_like
+    return (addr, is_write, insn, core_app, scalars,
+            jnp.int32(policy_idx))
 
 
 def round_signature(group: Tuple[str, ...], arch: str,
                     structure: GeomStructure,
-                    round_shape: Tuple[int, int]):
+                    round_shape: Tuple[int, int],
+                    insn_shape: Tuple[int, ...] = (),
+                    n_apps: int = 1):
     """Abstract shape/dtype pytree of one scanned round of ``arch``.
 
     The round is evaluated (``jax.eval_shape`` — no compilation, no
@@ -257,36 +459,62 @@ def round_signature(group: Tuple[str, ...], arch: str,
     stack into one executable must produce identical signatures — the
     carried state pytrees are what ``lax.switch`` requires to line up —
     and ``repro.core.sweep.SweepGrid`` validates that with this
-    function before it buckets a grid.
+    function before it buckets a grid. ``insn_shape``/``n_apps`` mirror
+    the trace's instruction-intensity shape and app count: mixes carry
+    per-app accumulators in the same pytree.
     """
     C, m = round_shape
     policies = [get_arch(a) for a in group]
     scalars = GeomScalars(*(jax.ShapeDtypeStruct((), jnp.float32)
                             for _ in GEOM_SCALAR_FIELDS))
 
-    def one_round(scalars, addr, is_write):
+    def one_round(scalars, addr, is_write, insn, core_app):
         geom = TracedGeometry(structure, scalars)
         state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
-                 _init_stats(geom))
-        new_state, _ = _round(get_arch(arch), geom, jnp.float32(1.0),
+                 _init_stats(geom, n_apps))
+        new_state, _ = _round(get_arch(arch), geom, insn, core_app,
                               state, (addr, is_write))
         return new_state
 
     out = jax.eval_shape(one_round, scalars,
                          jax.ShapeDtypeStruct((C, m), jnp.int32),
-                         jax.ShapeDtypeStruct((C, m), jnp.bool_))
+                         jax.ShapeDtypeStruct((C, m), jnp.bool_),
+                         jax.ShapeDtypeStruct(insn_shape, jnp.float32),
+                         jax.ShapeDtypeStruct((C,), jnp.int32))
     leaves, treedef = jax.tree.flatten(out)
     return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
 
 
-def _summarize(stats, shape, insn_per_req: float) -> SimResult:
-    T, C, m = shape
-    instructions = T * C * m * insn_per_req
+def _summarize(stats, trace: Trace) -> SimResult:
+    T, C, m = trace.addr.shape
+    cycles_per_core = np.asarray(stats["cycles"], np.float64)  # (C,)
+    if np.ndim(trace.insn_per_req) == 0:
+        # unchanged scalar float path: pre-mix results stay bit-exact
+        instructions = T * C * m * float(trace.insn_per_req)
+    else:
+        instructions = float(T * m * np.sum(trace.insn_vector))
     cycles = float(stats["cycles"].max())
     requests = float(stats["requests"])
     local = float(stats["local_hits"])
     remote = float(stats["remote_hits"])
     lat_n = float(stats["l1_lat_n"])
+
+    ids = trace.core_app_ids
+    insn_vec = trace.insn_vector
+    per_app = []
+    for a in range(trace.n_apps):
+        sel = ids == a
+        k = int(sel.sum())
+        per_app.append(AppStats(
+            app=a, cores=k,
+            instructions=float(T * m * insn_vec[sel].sum()),
+            cycles=float(cycles_per_core[sel].max()),
+            requests=float(T * k * m),
+            local_hits=float(stats["app_local"][a]),
+            remote_hits=float(stats["app_remote"][a]),
+            l1_lat_sum=float(stats["app_lat_sum"][a]),
+            l1_lat_n=float(stats["app_lat_n"][a])))
+
     return SimResult(
         ipc=instructions / cycles,
         # NaN when no load was ever fully served inside the L1 complex
@@ -301,6 +529,7 @@ def _summarize(stats, shape, insn_per_req: float) -> SimResult:
         noc_flits=float(stats["noc_flits"]),
         cycles=cycles,
         instructions=instructions,
+        per_app=tuple(per_app),
     )
 
 
@@ -309,17 +538,22 @@ def _check_arch(arch: str) -> None:
         raise ValueError(f"arch must be one of {registered_archs()}")
 
 
+def trace_kind(trace: Trace) -> tuple:
+    """The executable-keying shape of a trace: (addr shape, insn shape,
+    n_apps). Traces sharing a kind (and a dataflow group + geometry
+    structure) share one compiled executable."""
+    return (trace.addr.shape, np.shape(trace.insn_per_req), trace.n_apps)
+
+
 def simulate(arch: str, trace: Trace,
              geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
     """Run a trace through one architecture and summarize."""
     _check_arch(arch)
     structure, scalars = split_geometry(geom)
-    addr = jnp.asarray(trace.addr, jnp.int32)
-    is_write = jnp.asarray(trace.is_write, bool)
-    insn = jnp.float32(trace.insn_per_req)
     stats = jax.device_get(_simulate(
-        (arch,), _point_arrays((addr, is_write, insn), scalars), structure))
-    return _summarize(stats, trace.addr.shape, trace.insn_per_req)
+        (arch,), _point_arrays(_trace_arrays(trace), scalars), structure,
+        trace.n_apps))
+    return _summarize(stats, trace)
 
 
 def simulate_batch(arch: str, traces: Sequence[Trace],
@@ -329,40 +563,49 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
     The traces are stacked on a new leading axis and the scanned
     simulation is ``jax.vmap``-ed over it, so the whole sweep is a single
     compiled executable (and a single device dispatch) regardless of how
-    many traces are in the batch. All traces must share one (T, C, m)
-    shape; :func:`simulate_many` handles mixed shapes by grouping.
+    many traces are in the batch. All traces must share one
+    :func:`trace_kind` — (T, C, m) shape, instruction-intensity shape,
+    and app count; :func:`simulate_many` handles mixed kinds by
+    grouping.
     """
     _check_arch(arch)
     if not traces:
         return []
-    shapes = {t.addr.shape for t in traces}
-    if len(shapes) != 1:
+    kinds = {trace_kind(t) for t in traces}
+    if len(kinds) != 1:
         raise ValueError(
-            f"simulate_batch needs same-shape traces, got {sorted(shapes)}; "
-            "use simulate_many for mixed shapes")
+            f"simulate_batch needs same-shape, same-kind traces "
+            f"((T, C, m), insn shape, n_apps), got {sorted(kinds)}; use "
+            "simulate_many for mixed kinds")
     structure, scalars = split_geometry(geom)
     B = len(traces)
+    n_apps = traces[0].n_apps
     addr = jnp.asarray(np.stack([t.addr for t in traces]), jnp.int32)
     is_write = jnp.asarray(np.stack([t.is_write for t in traces]), bool)
-    insn = jnp.asarray([t.insn_per_req for t in traces], jnp.float32)
-    batched = ((addr, is_write, insn,
+    if np.ndim(traces[0].insn_per_req) == 0:
+        insn = jnp.asarray([t.insn_per_req for t in traces], jnp.float32)
+    else:
+        insn = jnp.asarray(np.stack([t.insn_per_req for t in traces]),
+                           jnp.float32)
+    core_app = jnp.asarray(np.stack([t.core_app_ids for t in traces]),
+                           jnp.int32)
+    batched = ((addr, is_write, insn, core_app,
                 jax.tree.map(lambda s: jnp.broadcast_to(s, (B,)), scalars),
                 jnp.zeros((B,), jnp.int32)))
-    stats = jax.device_get(_simulate_batch((arch,), batched, structure))
-    shape = next(iter(shapes))
-    return [_summarize(jax.tree.map(lambda a: a[b], stats), shape,
-                       traces[b].insn_per_req)
+    stats = jax.device_get(_simulate_batch((arch,), batched, structure,
+                                           n_apps))
+    return [_summarize(jax.tree.map(lambda a: a[b], stats), traces[b])
             for b in range(len(traces))]
 
 
 def simulate_many(arch: str, traces: Sequence[Trace],
                   geom: GpuGeometry = PAPER_GEOMETRY) -> List[SimResult]:
-    """``simulate_batch`` over arbitrary traces: group by shape, preserve
+    """``simulate_batch`` over arbitrary traces: group by kind, preserve
     input order."""
     _check_arch(arch)
     groups: Dict[tuple, List[int]] = {}
     for i, t in enumerate(traces):
-        groups.setdefault(t.addr.shape, []).append(i)
+        groups.setdefault(trace_kind(t), []).append(i)
     out: List[SimResult] = [None] * len(traces)  # type: ignore[list-item]
     for idxs in groups.values():
         for i, r in zip(idxs, simulate_batch(

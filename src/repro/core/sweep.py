@@ -30,9 +30,12 @@ compiling as few executables as possible:
   points at a time per dispatch.
 
 An executable is therefore keyed by (arch dataflow group, geometry
-structure, trace shape, padded batch size, device count); everything
-else — policy choice, timing scalars, addresses, instruction mix — is
-data. Results are bit-identical to running :func:`repro.core.simulate`
+structure, trace *kind* = shape + insn shape + app count, padded batch
+size, device count); everything else — policy choice, timing scalars,
+addresses, instruction mix, app-to-core assignment — is data.
+Multi-tenant mixes (``repro.core.trace.WorkloadMix``) are ordinary
+grid points: same-shape mixes share one executable per dataflow group.
+Results are bit-identical to running :func:`repro.core.simulate`
 per point (a tier-1 test asserts this), so figures can move freely
 between the two.
 """
@@ -49,7 +52,7 @@ import numpy as np
 from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
                                  geom_structure, split_geometry)
 from repro.core.simulator import (SimResult, Trace, _check_arch, _sim_core,
-                                  _summarize, round_signature)
+                                  _summarize, round_signature, trace_kind)
 from repro.core.arch import get_arch, registered_archs
 from repro.sharding.compat import make_mesh_1d, shard_map
 from jax.sharding import PartitionSpec as P
@@ -96,16 +99,17 @@ def compile_count() -> int:
 
 
 def _sharded_executable(group: Tuple[str, ...], structure: GeomStructure,
-                        n_devices: int):
+                        n_devices: int, n_apps: int):
     """The jitted, device-sharded, vmapped simulator for one bucket."""
-    key = (group, structure, n_devices)
+    key = (group, structure, n_devices, n_apps)
     fn = _EXEC_MEMO.get(key)
     if fn is None:
         mesh = make_mesh_1d(n_devices, "grid")
 
         def local_batch(point_arrays):
             return jax.vmap(
-                lambda pa: _sim_core(group, pa, structure))(point_arrays)
+                lambda pa: _sim_core(group, pa, structure,
+                                     n_apps))(point_arrays)
 
         fn = jax.jit(shard_map(local_batch, mesh=mesh,
                                in_specs=P("grid"), out_specs=P("grid")))
@@ -136,11 +140,12 @@ _SIG_MEMO: Dict[tuple, object] = {}
 
 
 def _signature(group: Tuple[str, ...], arch: str, structure: GeomStructure,
-               round_shape: Tuple[int, int]):
-    key = (group, arch, structure, round_shape)
+               round_shape: Tuple[int, int],
+               insn_shape: Tuple[int, ...] = (), n_apps: int = 1):
+    key = (group, arch, structure, round_shape, insn_shape, n_apps)
     if key not in _SIG_MEMO:
         _SIG_MEMO[key] = round_signature(group, arch, structure,
-                                         round_shape)
+                                         round_shape, insn_shape, n_apps)
     return _SIG_MEMO[key]
 
 
@@ -203,14 +208,16 @@ class SweepGrid:
             if len(archs) < 2:
                 continue
             members = set(archs)
-            combos = {(geom_structure(p.geom), p.trace.addr.shape[1:])
+            combos = {(geom_structure(p.geom), p.trace.addr.shape[1:],
+                       np.shape(p.trace.insn_per_req), p.trace.n_apps)
                       for p in self.points if p.arch in members}
             group = _canonical_group(archs)
-            for structure, round_shape in combos:
-                ref = _signature(group, archs[0], structure, round_shape)
+            for structure, round_shape, insn_shape, n_apps in combos:
+                ref = _signature(group, archs[0], structure, round_shape,
+                                 insn_shape, n_apps)
                 for arch in archs[1:]:
-                    if _signature(group, arch, structure,
-                                  round_shape) != ref:
+                    if _signature(group, arch, structure, round_shape,
+                                  insn_shape, n_apps) != ref:
                         raise ValueError(
                             f"stack_key {key!r}: architecture {arch!r} "
                             f"does not share {archs[0]!r}'s round "
@@ -246,16 +253,20 @@ class SweepGrid:
                 splits[geom] = split_geometry(geom)
             return splits[geom]
 
-        # Execution buckets: (group, structure, trace shape).
+        # Execution buckets: (group, structure, trace kind) — kind =
+        # (addr shape, insn shape, n_apps), so multi-app mixes bucket
+        # apart from solo traces but together with each other (no
+        # per-mix recompilation).
         buckets: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
-            key = (group_of[p.arch], split(p.geom)[0], p.trace.addr.shape)
+            key = (group_of[p.arch], split(p.geom)[0], trace_kind(p.trace))
             buckets.setdefault(key, []).append(i)
 
         results: List[Optional[SimResult]] = [None] * len(self.points)
         used_execs: set = set()
         new_compiles = 0
-        for (group, structure, shape), idxs in buckets.items():
+        for (group, structure, kind), idxs in buckets.items():
+            _, insn_shape, n_apps = kind
             B = len(idxs)
             pad = (-B) % D
             rows = idxs + [idxs[-1]] * pad          # repeat last point
@@ -264,25 +275,32 @@ class SweepGrid:
                                jnp.int32)
             is_write = jnp.asarray(
                 np.stack([p.trace.is_write for p in pts]), bool)
-            insn = jnp.asarray([p.trace.insn_per_req for p in pts],
-                               jnp.float32)
+            if insn_shape == ():
+                insn = jnp.asarray([p.trace.insn_per_req for p in pts],
+                                   jnp.float32)
+            else:
+                insn = jnp.asarray(
+                    np.stack([p.trace.insn_per_req for p in pts]),
+                    jnp.float32)
+            core_app = jnp.asarray(
+                np.stack([p.trace.core_app_ids for p in pts]), jnp.int32)
             scalars = jax.tree.map(
                 lambda *leaves: jnp.stack(leaves),
                 *[split(p.geom)[1] for p in pts])
             policy_idx = jnp.asarray(
                 [group.index(p.arch) for p in pts], jnp.int32)
-            exec_key = (group, structure, shape, B + pad, D)
+            exec_key = (group, structure, kind, B + pad, D)
             used_execs.add(exec_key)
             if exec_key not in _COMPILED_KEYS:
                 _COMPILED_KEYS.add(exec_key)
                 new_compiles += 1
-            fn = _sharded_executable(group, structure, D)
+            fn = _sharded_executable(group, structure, D, n_apps)
             stats = jax.device_get(
-                fn((addr, is_write, insn, scalars, policy_idx)))
+                fn((addr, is_write, insn, core_app, scalars, policy_idx)))
             for b, i in enumerate(idxs):
                 results[i] = _summarize(
-                    jax.tree.map(lambda a: a[b], stats), shape,
-                    self.points[i].trace.insn_per_req)
+                    jax.tree.map(lambda a: a[b], stats),
+                    self.points[i].trace)
 
         report = SweepReport(
             n_points=len(self.points),

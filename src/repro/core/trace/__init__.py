@@ -1,0 +1,22 @@
+"""Composable workload-trace layer.
+
+Split from the seed-era ``repro.core.workloads`` monolith (which now
+re-exports from here for backwards compatibility):
+
+  apps.py        the calibrated :class:`AppParams` table (data only)
+  generators.py  :func:`make_trace` + kernel-parameter rules + the
+                 int32 address guard
+  mix.py         :class:`WorkloadMix` — multi-tenant composition with
+                 per-app attribution (``Trace.core_app``)
+"""
+from repro.core.trace.apps import (APPS, HIGH_LOCALITY, LOW_LOCALITY,
+                                   AppParams)
+from repro.core.trace.generators import (app_kernels, kernel_params,
+                                         make_trace)
+from repro.core.trace.mix import APP_STRIDE, WorkloadMix
+
+__all__ = [
+    "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
+    "app_kernels", "kernel_params", "make_trace",
+    "APP_STRIDE", "WorkloadMix",
+]

@@ -1,0 +1,302 @@
+"""WorkloadMix composition, MixResult fairness math, the run_mixes
+driver riding the sweep grid, and the mix section of the sensitivity
+report + its schema-versioned regression gate."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (APPS, PAPER_GEOMETRY, AppStats, SimResult,
+                        SweepGrid, SweepPoint, WorkloadMix, run_mixes,
+                        simulate)
+from repro.core import report as sensitivity
+from repro.core.metrics import MixResult
+from repro.core.trace.mix import APP_STRIDE
+
+
+def same_result(a, b):
+    return all(x == y or (x != x and y != y)
+               for x, y in zip(tuple(a), tuple(b)))
+
+
+# ---------------------------------------------------------------------------
+# core assignment layouts
+# ---------------------------------------------------------------------------
+def test_partitioned_assignment_is_contiguous_blocks():
+    mix = WorkloadMix(apps=("cfd", "HS3D"))
+    assign = mix.core_assignment(30)
+    assert assign.tolist() == [0] * 15 + [1] * 15
+
+
+def test_interleaved_assignment_deals_round_robin():
+    mix = WorkloadMix(apps=("cfd", "HS3D"), layout="interleaved")
+    assign = mix.core_assignment(6)
+    assert assign.tolist() == [0, 1, 0, 1, 0, 1]
+    # asymmetric shares: round-robin until the small share is spent
+    mix = WorkloadMix(apps=("cfd", "HS3D"), shares=(4, 2),
+                      layout="interleaved")
+    assert mix.core_assignment(6).tolist() == [0, 1, 0, 1, 0, 0]
+
+
+def test_asymmetric_shares_and_share_validation():
+    mix = WorkloadMix(apps=("cfd", "HS3D"), shares=(20, 10))
+    assert mix.core_assignment(30).tolist() == [0] * 20 + [1] * 10
+    with pytest.raises(ValueError, match="sum to n_cores"):
+        WorkloadMix(apps=("cfd", "HS3D"), shares=(20, 20)) \
+            .core_assignment(30)
+    with pytest.raises(ValueError, match=">= 1 core"):
+        WorkloadMix(apps=("cfd", "HS3D"), shares=(30, 0)) \
+            .core_assignment(30)
+    # equal split distributes the remainder to early slots
+    assert WorkloadMix(apps=("cfd", "HS3D", "lud")) \
+        .resolve_shares(10) == (4, 3, 3)
+
+
+def test_mix_spec_validation():
+    with pytest.raises(ValueError, match="at least one app"):
+        WorkloadMix(apps=())
+    with pytest.raises(ValueError, match="layout"):
+        WorkloadMix(apps=("cfd",), layout="striped")
+    with pytest.raises(ValueError, match="unknown app"):
+        WorkloadMix(apps=("nope",))
+    with pytest.raises(ValueError, match="one core count per app"):
+        WorkloadMix(apps=("cfd", "HS3D"), shares=(30,))
+    with pytest.raises(ValueError, match="one kernel per app"):
+        WorkloadMix(apps=("cfd", "HS3D"), kernels=(0,))
+
+
+def test_mix_id_is_stable_and_descriptive():
+    assert WorkloadMix(apps=("cfd", "HS3D")).mix_id == "cfd+HS3D"
+    m = WorkloadMix(apps=("cfd", "HS3D"), shares=(20, 10),
+                    layout="interleaved", phase_rounds=7)
+    assert m.mix_id == "cfd+HS3D@20,10|interleaved|ph7"
+    assert WorkloadMix(apps=("cfd",), name="solo").mix_id == "solo"
+
+
+# ---------------------------------------------------------------------------
+# address-space slicing + phase stagger
+# ---------------------------------------------------------------------------
+def test_mix_slots_never_falsely_share_lines():
+    mix = WorkloadMix(apps=("cfd", "cfd"), rounds=64)   # same app twice!
+    tr = mix.compose(30)
+    assign = tr.core_app
+    a0 = tr.addr[:, assign == 0, :]
+    a1 = tr.addr[:, assign == 1, :]
+    assert a0.max() < APP_STRIDE                  # slot 0: original slice
+    assert APP_STRIDE <= a1.min()                 # slot 1: offset slice
+    assert a1.max() < 2 * APP_STRIDE
+    # same app, distinct slots: different seeds, not a shifted copy
+    assert not np.array_equal(a0, a1 - APP_STRIDE)
+
+
+def test_phase_stagger_rotates_component_rounds():
+    plain = WorkloadMix(apps=("cfd", "HS3D"), rounds=64)
+    phased = dataclasses.replace(plain, phase_rounds=16)
+    t0, t1 = plain.compose(30), phased.compose(30)
+    cols = t0.core_app == 1
+    np.testing.assert_array_equal(
+        t1.addr[:, cols, :], np.roll(t0.addr[:, cols, :], 16, axis=0))
+    # slot 0 is the phase anchor
+    np.testing.assert_array_equal(t1.addr[:, ~cols, :],
+                                  t0.addr[:, ~cols, :])
+
+
+def test_component_traces_are_the_solo_baselines():
+    """Solo baselines expose each core to byte-identical addresses as
+    the composed mix — slowdown is pure interference."""
+    mix = WorkloadMix(apps=("cfd", "HS3D"), rounds=64)
+    comps = mix.component_traces(30)
+    tr = mix.compose(30)
+    for slot, comp in enumerate(comps):
+        cols = tr.core_app == slot
+        np.testing.assert_array_equal(tr.addr[:, cols, :],
+                                      comp.addr[:, cols, :])
+
+
+# ---------------------------------------------------------------------------
+# MixResult fairness math (synthetic inputs with known answers)
+# ---------------------------------------------------------------------------
+def _sim(per_app, ipc=10.0):
+    return SimResult(ipc=ipc, l1_latency=30.0, local_hit_rate=0.5,
+                     remote_hit_rate=0.0, l1_hit_rate=0.5,
+                     l2_accesses=1.0, dram_accesses=1.0, noc_flits=1.0,
+                     cycles=100.0, instructions=1000.0,
+                     per_app=tuple(per_app))
+
+
+def _app(app, cores, ipc):
+    return AppStats(app=app, cores=cores, instructions=ipc * 100.0,
+                    cycles=100.0, requests=400.0, local_hits=100.0,
+                    remote_hits=50.0, l1_lat_sum=300.0, l1_lat_n=10.0)
+
+
+def test_mix_result_fairness_math():
+    # app0: 10 cores at shared ipc 20 (2/core); solo 90 over 30 cores
+    #   (3/core) -> slowdown 1.5
+    # app1: 20 cores at shared ipc 40 (2/core); solo 60 over 30 cores
+    #   (2/core) -> slowdown 1.0
+    mr = MixResult(
+        mix=WorkloadMix(apps=("cfd", "HS3D"), shares=(10, 20)),
+        arch="ata",
+        shared=_sim([_app(0, 10, 20.0), _app(1, 20, 40.0)]),
+        solo=[_sim([_app(0, 30, 90.0)], ipc=90.0),
+              _sim([_app(1, 30, 60.0)], ipc=60.0)])
+    assert mr.n_cores == 30
+    assert mr.slowdowns == pytest.approx([1.5, 1.0])
+    assert mr.weighted_speedup == pytest.approx(1 / 1.5 + 1.0)
+    assert mr.unfairness == pytest.approx(1.5)
+    assert mr.per_app_ipc == pytest.approx([20.0, 40.0])
+    assert mr.per_app_l1_hit_rate == pytest.approx([150 / 400] * 2)
+
+
+def test_app_stats_derived_rates():
+    a = _app(0, 10, 20.0)
+    assert a.ipc == pytest.approx(20.0)
+    assert a.local_hit_rate == pytest.approx(0.25)
+    assert a.l1_hit_rate == pytest.approx(0.375)
+    assert a.l1_latency == pytest.approx(30.0)
+    starved = a._replace(l1_lat_n=0.0)
+    assert np.isnan(starved.l1_latency)
+
+
+# ---------------------------------------------------------------------------
+# run_mixes rides the grid: bit-exact, budgeted executables
+# ---------------------------------------------------------------------------
+def test_run_mixes_bit_exact_and_budgeted():
+    mixes = [WorkloadMix(apps=("cfd", "HS3D")),
+             WorkloadMix(apps=("HS3D", "cfd"))]   # same shape, reversed
+    run = run_mixes(mixes, archs=("private", "ata"), rounds=96)
+    # 2 dataflow groups x {mix kind, solo kind} — same-shape mixes
+    # share buckets, no per-mix recompilation
+    assert run.report.n_executables <= 4, run.report
+    for mix in (dataclasses.replace(m, rounds=96) for m in mixes):
+        shared_tr = mix.compose(PAPER_GEOMETRY.n_cores)
+        comps = mix.component_traces(PAPER_GEOMETRY.n_cores)
+        for arch in ("private", "ata"):
+            mr = run.results[mix.mix_id][arch]
+            assert same_result(mr.shared, simulate(arch, shared_tr))
+            for comp, solo in zip(comps, mr.solo):
+                assert same_result(solo, simulate(arch, comp))
+            assert 0 < mr.weighted_speedup <= 2.5
+            assert mr.unfairness >= 1.0
+
+
+def test_run_mixes_rejects_duplicate_ids():
+    with pytest.raises(ValueError, match="duplicate mix ids"):
+        run_mixes([WorkloadMix(apps=("cfd", "HS3D")),
+                   WorkloadMix(apps=("cfd", "HS3D"))],
+                  archs=("private",), rounds=32)
+
+
+def test_mix_points_are_ordinary_sweep_grid_points():
+    """A mix trace drops into SweepGrid next to solo traces and stacked
+    families keep their executables."""
+    from repro.core import make_trace
+    mix = WorkloadMix(apps=("cfd", "HS3D"), rounds=96).compose(30)
+    tr = make_trace(dataclasses.replace(APPS["cfd"], rounds=96))
+    pts = [SweepPoint(a, PAPER_GEOMETRY, t)
+           for a in ("ata", "ata_fifo") for t in (tr, mix)]
+    grid = SweepGrid.from_points(pts)
+    run = grid.run()
+    assert run.report.n_executables == 2   # one family x 2 trace kinds
+    for pt, r in zip(grid.points, run.results):
+        assert same_result(r, simulate(pt.arch, pt.trace))
+
+
+# ---------------------------------------------------------------------------
+# fig_mix_fairness benchmark smoke
+# ---------------------------------------------------------------------------
+def test_fig_mix_fairness_smoke(capsys):
+    from benchmarks import fig_mix_fairness
+    out = fig_mix_fairness.run(rounds=48,
+                               pairings=(("cfd", "HS3D"),),
+                               archs=("private", "ata"))
+    assert ("cfd+HS3D", "ata") in out and ("cfd+HS3D", "private") in out
+    assert ("cfd+HS3D", "ata_vs_private") in out
+    printed = capsys.readouterr().out
+    assert "fig_mix.cfd+HS3D.ata.weighted_speedup" in printed
+    assert "fig_mix.cfd+HS3D.ata.unfairness" in printed
+
+
+def test_fig_mix_fairness_reuses_shared_grid_run(capsys):
+    """--report-json path: one mix_grid_run feeds figure + report."""
+    from benchmarks import fig_mix_fairness
+    pairings = (("cfd", "HS3D"),)
+    shared = sensitivity.mix_grid_run(pairings, ("private", "ata"),
+                                      rounds=48)
+    out = fig_mix_fairness.run(rounds=48, pairings=pairings,
+                               archs=("private", "ata"), mix_run=shared)
+    mr = shared.results["cfd+HS3D"]["ata"]
+    assert out[("cfd+HS3D", "ata")] == mr.weighted_speedup
+    rep_section = sensitivity.run_mix_sensitivity(
+        pairings, ("private", "ata"), rounds=48, mix_run=shared)
+    cell = next(c for c in rep_section["cells"] if c["arch"] == "ata")
+    assert cell["weighted_speedup"] \
+        == pytest.approx(mr.weighted_speedup)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity report: mix section + schema-versioned gate
+# ---------------------------------------------------------------------------
+KNOBS = {"hide": (5.0, 10.0)}
+
+
+@pytest.fixture(scope="module")
+def v2_report():
+    return sensitivity.run_sensitivity(
+        app="cfd", archs=("private", "ata"), knobs=KNOBS,
+        kernels_per_app=1, rounds=64,
+        mix_pairings=(("cfd", "HS3D"),))
+
+
+def test_report_mix_section_structure(v2_report, tmp_path):
+    rep = v2_report
+    assert rep["schema"] == sensitivity.SCHEMA_VERSION == 2
+    mix = rep["mix"]
+    assert {c["arch"] for c in mix["cells"]} \
+        == set(sensitivity.MIX_ARCHS)
+    for cell in mix["cells"]:
+        assert cell["mix"] == "cfd+HS3D"
+        assert cell["weighted_speedup"] > 0
+        assert cell["unfairness"] >= 1.0
+        assert len(cell["per_app_ipc"]) == 2
+    # solo sweep accounting is untouched by the mix section existing
+    assert mix["sweep"]["n_executables"] > 0
+    assert rep["sweep"]["n_executables"] > 0
+    md_path = sensitivity.write_report(str(tmp_path / "rep.json"), rep)
+    md = open(md_path).read()
+    assert "Multi-tenant fairness" in md
+    assert "| cfd+HS3D | ata |" in md
+    again = sensitivity.load_report(str(tmp_path / "rep.json"))
+    assert again == json.loads(json.dumps(rep))
+
+
+def test_gate_tolerates_newer_schema_with_mix_section(v2_report):
+    rep = v2_report
+    v1 = json.loads(json.dumps(rep))
+    del v1["mix"]
+    v1["schema"] = 1
+    # schema-1 baseline vs schema-2 candidate: solo cells gate, the new
+    # mix section is tolerated instead of failing on unknown keys
+    assert sensitivity.compare_reports(v1, rep) == []
+    # downgrades are not comparable
+    fails = sensitivity.compare_reports(rep, v1)
+    assert len(fails) == 1 and "schema mismatch" in fails[0]
+
+
+def test_gate_flags_mix_drift_and_executable_growth(v2_report):
+    rep = v2_report
+    assert sensitivity.compare_reports(rep, rep) == []
+    drift = json.loads(json.dumps(rep))
+    drift["mix"]["cells"][0]["weighted_speedup"] *= 1.3
+    fails = sensitivity.compare_reports(rep, drift)
+    assert len(fails) == 1 and "weighted-speedup drift" in fails[0]
+    grown = json.loads(json.dumps(rep))
+    grown["mix"]["sweep"]["n_executables"] += 1
+    fails = sensitivity.compare_reports(rep, grown)
+    assert len(fails) == 1 and "mix executable count grew" in fails[0]
+    missing = json.loads(json.dumps(rep))
+    del missing["mix"]
+    fails = sensitivity.compare_reports(rep, missing)
+    assert len(fails) == 1 and "mix section missing" in fails[0]

@@ -217,6 +217,60 @@ def test_ciao_zero_threshold_degenerates_to_private(data):
 
 
 # ---------------------------------------------------------------------------
+# per-app attribution: invariant under app relabeling
+# ---------------------------------------------------------------------------
+#: Small machine so full simulate() stays cheap inside hypothesis.
+_MIX_GEOM = GpuGeometry(n_cores=6, cluster_size=3, l1_sets=2, l1_ways=2,
+                        l1_banks=2, l2_parts=2, l2_sets=4, l2_ways=2)
+
+
+def _tiny_trace(data, core_app):
+    from repro.core.simulator import Trace
+    T, C, m = 12, _MIX_GEOM.n_cores, 2
+    n = T * C * m
+    addr = np.asarray(
+        data.draw(st.lists(st.integers(0, 63), min_size=n, max_size=n)),
+        np.int32).reshape(T, C, m)
+    is_write = np.asarray(
+        data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    ).reshape(T, C, m)
+    return Trace(addr=addr, is_write=is_write, insn_per_req=5.0,
+                 core_app=core_app)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.permutations(range(3)), st.data())
+def test_per_app_attribution_invariant_under_relabeling(perm, data):
+    """Relabeling which app id each core carries must only relabel the
+    per-app attribution block — every AppStats follows its app to the
+    new slot with identical counters (cores, requests, hits, cycles,
+    latency sums), and the whole-trace SimResult is untouched."""
+    from repro.core import simulate
+    base_ids = np.asarray([0, 0, 1, 1, 2, 2], np.int32)
+    perm = np.asarray(perm, np.int32)
+    tr = _tiny_trace(data, base_ids)
+    relabeled = tr._replace(core_app=perm[base_ids])
+    r0 = simulate("ata", tr, _MIX_GEOM)
+    r1 = simulate("ata", relabeled, _MIX_GEOM)
+    # the simulation itself must not depend on labels at all
+    # (identical-NaN l1_latency counts as equal)
+    assert all(x == y or (x != x and y != y)
+               for x, y in zip(tuple(r0)[:-1], tuple(r1)[:-1]))
+    for a in range(3):
+        orig, moved = r0.per_app[a], r1.per_app[int(perm[a])]
+        assert moved.cores == orig.cores
+        assert moved.requests == orig.requests
+        assert moved.cycles == orig.cycles
+        assert moved.local_hits == orig.local_hits
+        assert moved.remote_hits == orig.remote_hits
+        assert moved.l1_lat_n == orig.l1_lat_n
+        assert moved.l1_lat_sum == pytest.approx(orig.l1_lat_sum,
+                                                 rel=1e-6)
+        assert moved.instructions == pytest.approx(orig.instructions,
+                                                   rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
 # gradient compression (error feedback)
 # ---------------------------------------------------------------------------
 @settings(max_examples=20, deadline=None)
