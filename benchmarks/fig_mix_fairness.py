@@ -2,12 +2,14 @@
 
 The paper evaluates one app at a time; this figure asks the question
 the zoo was built for — **does ATA's advantage survive (or grow) when
-heterogeneous apps fight over one L1 complex?** Three locality
-pairings (``repro.core.report.MIX_PAIRINGS``) —
+heterogeneous apps fight over one L1 complex?** Four locality mixes
+(``repro.core.report.MIX_PAIRINGS``) —
 
-  cfd+b+tree   high x high inter-core locality
-  cfd+HS3D     a sharer co-run with a streamer (high x low)
-  HS3D+sradv1  both low locality / streaming   (low x low)
+  cfd+b+tree        high x high inter-core locality
+  cfd+HS3D          a sharer co-run with a streamer (high x low)
+  HS3D+sradv1       both low locality / streaming   (low x low)
+  cfd+b+tree+HS3D   a 3-app point: two sharers + a streamer on 10
+                    cores each (weighted-speedup ideal = 3)
 
 — each run through all six registered contention policies
 (``private, remote, decoupled, ata, ciao, victim``) via
@@ -16,7 +18,7 @@ composed mix *and* every per-slot solo baseline, so mixes bucket by
 trace kind (no per-mix recompilation) and solo points share the
 single-app executables.
 
-Emits per (pairing, arch): weighted speedup (ideal 2.0), unfairness
+Emits per (mix, arch): weighted speedup (ideal = n_apps), unfairness
 (max/min slowdown, ideal 1.0), and the mix IPC; plus the headline
 ata-vs-private weighted-speedup ratio per pairing. The
 machine-readable twin of this sweep is the ``mix`` section of

@@ -1,0 +1,79 @@
+"""Interconnect-topology sensitivity: the zoo under real NoC models.
+
+The paper's ATA evaluation assumes an idealized tag-side interconnect;
+this figure asks how much of each policy's win survives a *modeled*
+one. One ``SweepGrid`` run covers
+
+    archs  x  {ideal, crossbar, ring}  x  noc_bw in (4, 8, 16, 32)
+
+over one high-locality app's kernels — the NoC axis stacks (all
+built-in models share one family), so the grid compiles one executable
+per architecture family regardless of how many topologies it sweeps.
+
+Emits per (noc, noc_bw): the ata/private IPC ratio — the headline gap
+— plus the remote/private ratio (the probe-broadcast baseline is the
+topology models' worst case) and ata's mean NoC queue delay. Under
+``ideal`` the gap is flat in ``noc_bw`` by construction (private and
+ata never consume it); under ``crossbar`` the gap *closes*
+monotonically as bandwidth shrinks (ata's remote transfers queue at
+the serving ports, private pays nothing), and under ``ring`` likewise
+via hop latency + link serialization — the machine-readable twin is
+the ``noc`` section of ``repro.core.report.run_sensitivity``.
+"""
+import dataclasses
+import time
+
+from repro.core import PAPER_GEOMETRY, PAPER_NOCS, SweepGrid
+from repro.core.metrics import app_traces, grid_app_results, kernel_range
+from repro.core.report import NOC_BW_VALUES
+from benchmarks.common import emit
+
+APP = "cfd"
+ARCHS = ("private", "remote", "ata")
+#: Shared with the report's `noc` section — the two surfaces are
+#: documented twins and must sweep the same topology grid.
+NOCS = PAPER_NOCS
+NOC_BW = NOC_BW_VALUES
+
+
+def run(kernels_per_app=1, rounds=None, archs=ARCHS, nocs=NOCS,
+        noc_bw=NOC_BW):
+    """Sweep the topology grid; returns {(noc, noc_bw, label): value}."""
+    t0 = time.perf_counter()
+    archs, nocs, noc_bw = tuple(archs), tuple(nocs), tuple(noc_bw)
+    missing = {a for a in ("private", "ata") if a not in archs}
+    if missing:
+        raise ValueError(
+            "fig_noc_topology needs 'private' and 'ata' for the headline "
+            f"ata_vs_private ratio; archs={archs} is missing "
+            f"{sorted(missing)}")
+    traces = app_traces(APP, PAPER_GEOMETRY,
+                        kernel_range(APP, kernels_per_app or None),
+                        rounds=rounds)
+    geoms = [dataclasses.replace(PAPER_GEOMETRY, noc_bw=v)
+             for v in noc_bw]
+    grid = SweepGrid(archs, geoms, traces, nocs=nocs)
+    sweep = grid.run()
+    us = (time.perf_counter() - t0) * 1e6
+    n_cells = len(archs) * len(geoms) * len(nocs)
+    agg = grid_app_results(grid, sweep.results, APP)
+
+    out = {}
+    for noc in nocs:
+        for v, g in zip(noc_bw, geoms):
+            ata = agg[("ata", g, noc)]
+            ratio = ata.ipc / agg[("private", g, noc)].ipc
+            out[(noc, v, "ata_vs_private")] = ratio
+            emit(f"fig_noc.{APP}.{noc}.noc_bw={v:g}.ata_vs_private",
+                 us / n_cells, f"{ratio:.3f}")
+            if "remote" in archs:
+                rratio = (agg[("remote", g, noc)].ipc
+                          / agg[("private", g, noc)].ipc)
+                out[(noc, v, "remote_vs_private")] = rratio
+                emit(f"fig_noc.{APP}.{noc}.noc_bw={v:g}.remote_vs_private",
+                     us / n_cells, f"{rratio:.3f}")
+            out[(noc, v, "ata_queue_delay")] = ata.noc_mean_queue_delay
+            emit(f"fig_noc.{APP}.{noc}.noc_bw={v:g}.ata_queue_delay",
+                 us / n_cells, f"{ata.noc_mean_queue_delay:.2f}")
+    emit("fig_noc.executables", 0.0, sweep.report.n_executables)
+    return out

@@ -7,7 +7,9 @@ serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 --report-json additionally runs the contention-policy-zoo sensitivity
 sweep (``repro.core.report``: private/ata/ciao/victim over widened
 l1_ways / noc_bw / hide axes) plus the multi-tenant ``mix`` fairness
-section (the full zoo over the hi/hi, hi/lo, lo/lo app pairings) and
+section (the full zoo over the locality mixes, pairs and a 3-app
+point) and the interconnect-topology ``noc`` section (the zoo x
+{ideal, crossbar, ring} x noc_bw) and
 writes the machine-readable report JSON + markdown table to PATH —
 CI's sharded-sweep-smoke job uploads it as an artifact and gates on
 drift vs the committed baseline (``benchmarks/baselines/``,
@@ -45,8 +47,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     import jax
     from benchmarks import (fig8_ipc, fig9_kernels, fig10_latency,
-                            fig_mix_fairness, fig_sweep_geometry,
-                            kernel_micro, serving_ata, table1_landscape)
+                            fig_mix_fairness, fig_noc_topology,
+                            fig_sweep_geometry, kernel_micro, serving_ata,
+                            table1_landscape)
     from benchmarks.common import emit
     from repro.core import sweep as sweep_engine
     t0 = time.perf_counter()
@@ -55,6 +58,7 @@ def main() -> None:
     fig10_latency.run(kernels_per_app=k, rounds=args.rounds)
     table1_landscape.run(kernels_per_app=k, rounds=args.rounds)
     fig_sweep_geometry.run(kernels_per_app=k, rounds=args.rounds)
+    fig_noc_topology.run(kernels_per_app=k, rounds=args.rounds)
     # one fairness grid run serves both the figure and (below) the
     # report's mix section — the mixes are never simulated twice
     from repro.core.report import mix_grid_run
@@ -70,9 +74,11 @@ def main() -> None:
     if args.report_json:
         from repro.core import report as sensitivity
         t0 = time.perf_counter()
+        from repro.core.noc import PAPER_NOCS
         rep = sensitivity.run_sensitivity(
             kernels_per_app=None if args.full else 1, rounds=args.rounds,
-            mix_pairings=sensitivity.MIX_PAIRINGS, mix_run=mix_run)
+            mix_pairings=sensitivity.MIX_PAIRINGS, mix_run=mix_run,
+            noc_models=PAPER_NOCS)
         md_path = sensitivity.write_report(args.report_json, rep)
         emit("sensitivity.cells", (time.perf_counter() - t0) * 1e6,
              len(rep["cells"]))
@@ -81,6 +87,9 @@ def main() -> None:
         emit("sensitivity.mix_cells", 0.0, len(rep["mix"]["cells"]))
         emit("sensitivity.mix_executables", 0.0,
              rep["mix"]["sweep"]["n_executables"])
+        emit("sensitivity.noc_cells", 0.0, len(rep["noc"]["cells"]))
+        emit("sensitivity.noc_executables", 0.0,
+             rep["noc"]["sweep"]["n_executables"])
         print(f"sensitivity report: {args.report_json} + {md_path}",
               file=sys.stderr)
 

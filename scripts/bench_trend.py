@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""Nightly benchmark trend tracking: drift across a report history.
+
+The nightly CI job persists every full-fidelity sensitivity report
+(``benchmarks.run --full --report-json``) into a ``bench_history/``
+directory (one ``<date>.json`` per run, carried across runs by an
+actions cache and uploaded as the ``bench-history`` artifact). This
+script reads that directory and
+
+  * prints a per-cell IPC time series as CSV (``--csv PATH`` or
+    stdout),
+  * writes a markdown trend summary (``--markdown PATH``): latest
+    value, trailing median, and relative drift per cell — solo cells,
+    mix weighted speedups, and noc topology cells alike,
+  * flags cells whose *latest* value drifts beyond ``--rtol`` from the
+    trailing median of the earlier runs (a regression the per-PR gate
+    can miss when it creeps in below the per-run tolerance).
+
+Exit code is 0 unless ``--strict`` is passed and drift was flagged —
+trend tracking is informational by default so one noisy nightly cannot
+redden the calendar.
+
+    PYTHONPATH=src python scripts/bench_trend.py bench_history \
+        [--markdown TREND.md] [--csv trend.csv] [--rtol 0.05] [--strict]
+
+Reports are ordered by filename (ISO dates sort correctly); at least
+two are needed for drift, one still produces the tables.
+"""
+import argparse
+import json
+import os
+import statistics
+import sys
+from typing import Dict, List, Tuple
+
+
+def _cell_series(reports: List[Tuple[str, dict]]
+                 ) -> Dict[tuple, List[Tuple[str, float]]]:
+    """{(section, *cell key, metric): [(run name, value), ...]}."""
+    series: Dict[tuple, List[Tuple[str, float]]] = {}
+
+    def add(run, section, key, metric, value):
+        series.setdefault((section,) + key + (metric,), []) \
+            .append((run, float(value)))
+
+    for run, rep in reports:
+        for c in rep.get("cells", ()):
+            add(run, "solo", (c["arch"], c["knob"], c["value"]), "ipc",
+                c["ipc"])
+        for c in rep.get("mix", {}).get("cells", ()):
+            add(run, "mix", (c["mix"], c["arch"]), "weighted_speedup",
+                c["weighted_speedup"])
+        for c in rep.get("noc", {}).get("cells", ()):
+            add(run, "noc", (c["arch"], c["noc"], c["noc_bw"]), "ipc",
+                c["ipc"])
+    return series
+
+
+def load_history(directory: str) -> List[Tuple[str, dict]]:
+    names = sorted(n for n in os.listdir(directory)
+                   if n.endswith(".json"))
+    out = []
+    for name in names:
+        path = os.path.join(directory, name)
+        try:
+            with open(path) as f:
+                rep = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"skipping unreadable report {path}: {e}",
+                  file=sys.stderr)
+            continue
+        if "cells" not in rep:
+            print(f"skipping non-report JSON {path}", file=sys.stderr)
+            continue
+        out.append((os.path.splitext(name)[0], rep))
+    return out
+
+
+def trend_rows(series: Dict[tuple, List[Tuple[str, float]]],
+               rtol: float) -> List[dict]:
+    """One row per cell: latest, trailing median, drift, flagged."""
+    rows = []
+    for key in sorted(series, key=str):
+        points = series[key]
+        latest_run, latest = points[-1]
+        earlier = [v for _, v in points[:-1]]
+        if earlier:
+            med = statistics.median(earlier)
+            if med:
+                drift = (latest - med) / abs(med)
+            else:
+                # zero median: no drift if still zero, else unbounded
+                drift = 0.0 if latest == 0 else float("inf")
+            flagged = abs(drift) > rtol
+        else:
+            med, drift, flagged = latest, 0.0, False
+        rows.append({
+            "key": key, "runs": len(points), "latest_run": latest_run,
+            "latest": latest, "median": med, "drift": drift,
+            "flagged": flagged,
+        })
+    return rows
+
+
+def to_csv(series: Dict[tuple, List[Tuple[str, float]]]) -> str:
+    lines = ["section,cell,metric,run,value"]
+    for key in sorted(series, key=str):
+        section, *cell, metric = key
+        label = "/".join(str(c) for c in cell)
+        for run, value in series[key]:
+            lines.append(f"{section},{label},{metric},{run},{value!r}")
+    return "\n".join(lines) + "\n"
+
+
+def to_markdown(rows: List[dict], rtol: float, n_runs: int) -> str:
+    flagged = [r for r in rows if r["flagged"]]
+    lines = [
+        "# Benchmark trend report",
+        "",
+        f"{n_runs} run(s), {len(rows)} tracked cells, drift tolerance "
+        f"±{rtol:.0%} vs the trailing median.",
+        "",
+        (f"**{len(flagged)} cell(s) drifted beyond tolerance.**"
+         if flagged else "No cell drifted beyond tolerance."),
+        "",
+        "| section | cell | metric | runs | median | latest | drift |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    # flagged rows first, then the rest, so regressions lead the table
+    for r in flagged + [r for r in rows if not r["flagged"]]:
+        section, *cell, metric = r["key"]
+        label = "/".join(str(c) for c in cell)
+        mark = " ⚠" if r["flagged"] else ""
+        lines.append(
+            f"| {section} | {label} | {metric} | {r['runs']} "
+            f"| {r['median']:.3f} | {r['latest']:.3f} "
+            f"| {r['drift']:+.1%}{mark} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("history", help="directory of dated report JSONs")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="flag |latest - median|/median beyond this "
+                    "(default 5%%)")
+    ap.add_argument("--markdown", metavar="PATH",
+                    help="write the markdown trend summary here")
+    ap.add_argument("--csv", metavar="PATH",
+                    help="write the full time-series CSV here "
+                    "(default: stdout)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any cell is flagged")
+    args = ap.parse_args()
+
+    reports = load_history(args.history)
+    if not reports:
+        print(f"no reports found under {args.history}", file=sys.stderr)
+        return 1
+    series = _cell_series(reports)
+    rows = trend_rows(series, args.rtol)
+
+    csv = to_csv(series)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(csv)
+    else:
+        sys.stdout.write(csv)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(to_markdown(rows, args.rtol, len(reports)))
+
+    flagged = [r for r in rows if r["flagged"]]
+    for r in flagged:
+        section, *cell, metric = r["key"]
+        print(f"drift ⚠ {section} {'/'.join(map(str, cell))} {metric}: "
+              f"median {r['median']:.3f} -> latest {r['latest']:.3f} "
+              f"({r['drift']:+.1%})", file=sys.stderr)
+    print(f"trend: {len(reports)} runs, {len(rows)} cells, "
+          f"{len(flagged)} flagged (rtol {args.rtol:.0%})",
+          file=sys.stderr)
+    return 1 if (flagged and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

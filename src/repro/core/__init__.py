@@ -8,6 +8,8 @@ Public API:
   SweepGrid, SweepPoint, SweepReport — device-sharded multi-axis grids
   ARCHITECTURES               — ("private", "remote", "decoupled", "ata")
   ArchPolicy, register_arch, get_arch, registered_archs — policy plug-in
+  NocModel, register_noc, get_noc, registered_nocs — interconnect plug-in
+  PAPER_NOCS, NocStats        — topology comparison set + SimResult block
   ReplacementPolicy           — L1 victim selection (LRU / FIFO / RANDOM)
   APPS, make_trace            — calibrated workload suite (repro.core.trace)
   WorkloadMix                 — multi-tenant co-scheduling composer
@@ -17,12 +19,14 @@ Public API:
 """
 from repro.core.geometry import (GeomScalars, GeomStructure, GpuGeometry,
                                  PAPER_GEOMETRY, split_geometry)
-from repro.core.simulator import (ARCHITECTURES, AppStats, SimResult, Trace,
-                                  simulate, simulate_batch, simulate_many,
-                                  trace_kind)
+from repro.core.simulator import (ARCHITECTURES, AppStats, NocStats,
+                                  SimResult, Trace, simulate,
+                                  simulate_batch, simulate_many, trace_kind)
 from repro.core.sweep import SweepGrid, SweepPoint, SweepReport, SweepRun
 from repro.core.arch import (ArchPolicy, L1Outcome, RequestBatch, get_arch,
                              register_arch, registered_archs)
+from repro.core.noc import (NocModel, NocTraffic, NocTransit, PAPER_NOCS,
+                            get_noc, register_noc, registered_nocs)
 from repro.core.tagarray import ReplacementPolicy
 from repro.core.trace import (APPS, HIGH_LOCALITY, LOW_LOCALITY, AppParams,
                               WorkloadMix, kernel_params, make_trace)
@@ -36,6 +40,8 @@ __all__ = [
     "trace_kind", "simulate", "simulate_batch", "simulate_many", "SweepGrid",
     "SweepPoint", "SweepReport", "SweepRun", "ArchPolicy", "L1Outcome",
     "RequestBatch", "get_arch", "register_arch", "registered_archs",
+    "NocModel", "NocTraffic", "NocTransit", "NocStats", "PAPER_NOCS",
+    "get_noc", "register_noc", "registered_nocs",
     "ReplacementPolicy", "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
     "WorkloadMix", "kernel_params", "make_trace", "AppResult", "app_traces",
     "geomean", "normalized_ipc", "run_app", "run_suite", "MixResult",

@@ -103,4 +103,8 @@ class AtaPolicy(ArchPolicy):
             local_hits=local_hits,
             remote_hits=remote_ok,
             noc_flits=jnp.sum(remote_ok) * geom.flits_per_line,
+            # only known remote hits put flits on the interconnect —
+            # the tag-side filtering that is the paper's core win
+            noc_src=jnp.where(remote_ok, src_cache, reqs.core),
+            noc_req_flits=remote_ok * (geom.flits_per_line * 1.0),
         )

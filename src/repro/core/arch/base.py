@@ -69,6 +69,14 @@ class L1Outcome(NamedTuple):
     remote_hits: jnp.ndarray        # bool, served by a peer L1
     noc_flits: Union[jnp.ndarray, float]  # scalar flit count this round
     bypass_fill: Optional[jnp.ndarray] = None  # bool; True = skip L1 fill
+    #: (R,) int32 core whose cache serves each request (the NoC source
+    #: for remote transfers); None = the requesting core itself.
+    noc_src: Optional[jnp.ndarray] = None
+    #: (R,) float32 probe + data flits each request puts on the
+    #: L1-complex interconnect (``repro.core.noc``); None = the default
+    #: ``remote_hits * flits_per_line``. L2/write-back traffic rides
+    #: the memory-side network and is *not* included here.
+    noc_req_flits: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -54,4 +54,10 @@ class DecoupledPolicy(ArchPolicy):
             local_hits=hit,
             remote_hits=jnp.zeros((R,), bool),
             noc_flits=jnp.sum(hit) * geom.flits_per_line,
+            # home-cache hits ship the line from the home core's port;
+            # a line whose home is the requesting core itself never
+            # leaves the core and crosses nothing
+            noc_src=home,
+            noc_req_flits=((hit & (home != reqs.core))
+                           * (geom.flits_per_line * 1.0)),
         )

@@ -65,4 +65,12 @@ class RemotePolicy(ArchPolicy):
             remote_hits=remote_hit,
             noc_flits=(jnp.sum(miss) * (geom.cluster_size - 1)
                        + jnp.sum(remote_hit) * geom.flits_per_line),
+            # Topology models see only the point-to-point *data*
+            # transfers (line from the serving peer). The broadcast
+            # probes are already priced inside this policy
+            # (noc_delay/probe_wait above) and ride the dedicated probe
+            # channels — routing them through the data network too
+            # would double-charge them, and only on hits.
+            noc_src=jnp.where(remote_hit, src_cache, reqs.core),
+            noc_req_flits=remote_hit * (geom.flits_per_line * 1.0),
         )

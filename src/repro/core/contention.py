@@ -6,12 +6,111 @@ are all instances of one primitive: requests arriving at a keyed resource
 in the same round are served serially, so request *i* waits
 ``rank_i * svc`` cycles where ``rank_i`` is its position within its
 conflict group.
+
+Two implementations coexist:
+
+* :func:`_group_rank_onehot` — the original O(R*K) one-hot matrix
+  formulation. Kept as the executable reference (a hypothesis test
+  asserts equivalence) and as the fallback when a sort key would not
+  fit in int32.
+* the sort/segment-sum path (default) — O(R log R + R): one stable
+  argsort on a composite (key, index) sort key, a cumulative sum over
+  the sorted values, and a segment-base subtraction. The same machinery
+  generalizes from ranks (unit weights) to weighted prefix sums
+  (:func:`group_prefix_sum`), which the NoC models use for per-port
+  flit arbitration.
+
+Both paths return identical integers, so downstream float timing math —
+and therefore every committed golden — is bit-exact across them.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _group_rank_onehot(keys: jnp.ndarray, mask: jnp.ndarray, n_keys: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference one-hot implementation (O(R*K) time and memory)."""
+    onehot = (keys[:, None] == jnp.arange(n_keys)[None, :]) & mask[:, None]
+    counts = onehot.sum(axis=0)                           # (K,)
+    before = jnp.cumsum(onehot, axis=0) - onehot          # exclusive
+    rank = jnp.take_along_axis(before, keys[:, None], axis=1)[:, 0]
+    size = counts[keys]
+    rank = jnp.where(mask, rank, 0)
+    size = jnp.where(mask, size, 0)
+    return rank.astype(jnp.int32), size.astype(jnp.int32)
+
+
+def _sort_fits_int32(n_keys: int, n_requests: int) -> bool:
+    """Whether the composite (key, index) sort key fits in int32."""
+    return (n_keys + 1) * n_requests < _INT32_MAX
+
+
+def _segment_prefix(keys: jnp.ndarray, values: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Exclusive prefix sum of ``values`` within equal-``keys`` segments.
+
+    ``keys`` must already be sorted and ``values`` non-negative (the
+    running cumulative sum is then non-decreasing, which lets the
+    segment base be recovered with a ``cummax``). Dtype-generic:
+    integer ranks accumulate in int32 (exact for any group size),
+    float weights in float32.
+    """
+    csum = jnp.cumsum(values) - values               # exclusive, global
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), keys[1:] != keys[:-1]])
+    base = jax.lax.cummax(jnp.where(is_new, csum, jnp.zeros_like(csum)))
+    return csum - base
+
+
+def _group_prefix_onehot(keys: jnp.ndarray, v: jnp.ndarray, n_keys: int
+                         ) -> jnp.ndarray:
+    """Reference one-hot exclusive prefix sum (O(R*K); ``v`` pre-masked)."""
+    onehot = (keys[:, None] == jnp.arange(n_keys)[None, :]) * v[:, None]
+    before = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(before, keys[:, None], axis=1)[:, 0]
+
+
+def group_prefix_sum(keys: jnp.ndarray, values: jnp.ndarray,
+                     mask: jnp.ndarray, n_keys: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-request exclusive prefix sum and total of ``values`` by key.
+
+    keys   : (R,) int32 in [0, n_keys); values : (R,) float32 >= 0;
+    mask   : (R,) bool.
+    before : (R,) float32 — sum of earlier masked requests' values in
+             the same key group (0 if unmasked);
+    total  : (R,) float32 — group total (0 if unmasked).
+
+    This is the weighted generalization of :func:`group_rank` (which is
+    the unit-weight special case): the NoC crossbar model uses it for
+    "flits ahead of mine at my injection port". Like ``group_rank`` it
+    falls back to the one-hot reference when the composite sort key
+    would overflow int32.
+    """
+    R = keys.shape[0]
+    v = jnp.where(mask, values, 0.0).astype(jnp.float32)
+    totals = jnp.zeros((n_keys,), jnp.float32).at[keys].add(v)
+    total = jnp.where(mask, totals[keys], 0.0)
+    if R == 0:
+        return v, total
+    if not _sort_fits_int32(n_keys, R):
+        return (jnp.where(mask, _group_prefix_onehot(keys, v, n_keys), 0.0),
+                total)
+    # Composite key: masked-out requests sort last, original order is
+    # preserved inside a group (stable by construction — the index is
+    # part of the key).
+    k = jnp.where(mask, keys, n_keys)
+    composite = k * jnp.int32(R) + jnp.arange(R, dtype=jnp.int32)
+    order = jnp.argsort(composite)
+    before_sorted = _segment_prefix(k[order], v[order])
+    before = jnp.zeros_like(v).at[order].set(before_sorted)
+    return jnp.where(mask, before, 0.0), total
 
 
 def group_rank(keys: jnp.ndarray, mask: jnp.ndarray, n_keys: int
@@ -21,12 +120,24 @@ def group_rank(keys: jnp.ndarray, mask: jnp.ndarray, n_keys: int
     keys : (R,) int32 in [0, n_keys); mask : (R,) bool.
     rank : (R,) int32 — #earlier masked requests with the same key (0 if
            unmasked); size : (R,) int32 — total masked requests in group.
+
+    Hot path: sort/segment-sum, O(R log R + R) — the one-hot reference
+    is O(R*K) and allocates an (R, K) matrix per call (K = e.g.
+    n_cores * l1_banks inside every scanned round). Falls back to the
+    reference when the composite sort key would overflow int32.
     """
-    onehot = (keys[:, None] == jnp.arange(n_keys)[None, :]) & mask[:, None]
-    counts = onehot.sum(axis=0)                           # (K,)
-    before = jnp.cumsum(onehot, axis=0) - onehot          # exclusive
-    rank = jnp.take_along_axis(before, keys[:, None], axis=1)[:, 0]
-    size = counts[keys]
+    R = keys.shape[0]
+    if R == 0 or not _sort_fits_int32(n_keys, R):
+        return _group_rank_onehot(keys, mask, n_keys)
+    m = mask.astype(jnp.int32)
+    counts = jnp.zeros((n_keys,), jnp.int32).at[keys].add(m)
+    size = jnp.where(mask, counts[keys], 0)
+    k = jnp.where(mask, keys, n_keys)
+    composite = k * jnp.int32(R) + jnp.arange(R, dtype=jnp.int32)
+    order = jnp.argsort(composite)
+    # int32 accumulation: exact for any group size (a float32 cumsum
+    # would silently saturate ranks past 2**24)
+    rank_sorted = _segment_prefix(k[order], m[order])
+    rank = jnp.zeros((R,), jnp.int32).at[order].set(rank_sorted)
     rank = jnp.where(mask, rank, 0)
-    size = jnp.where(mask, size, 0)
     return rank.astype(jnp.int32), size.astype(jnp.int32)

@@ -62,6 +62,15 @@ class GpuGeometry:
     flits_per_line: int = 4  # 128B line / 40B flit (rounded up)
     noc_bw: float = 16.0     # flits/cycle the probe network sustains/cluster
 
+    # --- interconnect topology (repro.core.noc models) ----------------------
+    # Per-port forwarding rate is noc_bw / cluster_size (the cluster's
+    # probe-network bandwidth shared across its cores' remote-data
+    # ports); these scalars shape the topology-aware models only — the
+    # `ideal` NoC ignores them, so the paper geometry is unchanged.
+    noc_drain: float = 32.0  # cycles of NoC forwarding budget per round
+    noc_queue: float = 128.0  # per-port injection-queue capacity (flits)
+    ring_hop: float = 2.0    # cycles per ring hop between cluster slots
+
     # --- core pipeline model ------------------------------------------------
     issue_rate: float = 4.0  # peak insn/cycle/core (4 GTO schedulers)
     hide: float = 10.0       # warp-level latency-hiding divisor
@@ -83,6 +92,7 @@ GEOM_STRUCTURE_FIELDS = ("n_cores", "cluster_size", "l1_sets", "l1_ways",
 GEOM_SCALAR_FIELDS = ("lat_l1", "lat_xbar", "lat_home", "lat_l2",
                       "lat_dram", "lat_probe", "svc_bank", "svc_port",
                       "svc_probe", "svc_l2", "flits_per_line", "noc_bw",
+                      "noc_drain", "noc_queue", "ring_hop",
                       "issue_rate", "hide")
 
 
@@ -118,6 +128,9 @@ class GeomScalars(NamedTuple):
     svc_l2: jnp.ndarray
     flits_per_line: jnp.ndarray
     noc_bw: jnp.ndarray
+    noc_drain: jnp.ndarray
+    noc_queue: jnp.ndarray
+    ring_hop: jnp.ndarray
     issue_rate: jnp.ndarray
     hide: jnp.ndarray
 

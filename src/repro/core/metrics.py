@@ -72,6 +72,23 @@ class AppResult:
         return float(sum(r.noc_flits for r in self.per_kernel))
 
     @property
+    def noc_flits_injected(self) -> float:
+        # traffic actually routed by the modeled interconnect
+        # (repro.core.noc) — unlike `noc_flits`, which also counts the
+        # memory-side L2/write-back flits the NoC layer excludes
+        return float(sum(r.noc.flits_injected for r in self.per_kernel))
+
+    @property
+    def noc_mean_queue_delay(self) -> float:
+        # interconnect queueing (repro.core.noc): 0.0 under `ideal`
+        return _nanmean(r.noc.mean_queue_delay for r in self.per_kernel)
+
+    @property
+    def noc_max_link_util(self) -> float:
+        # hotspot link utilization, worst kernel
+        return float(max(r.noc.max_link_util for r in self.per_kernel))
+
+    @property
     def l2_accesses(self) -> float:
         return float(sum(r.l2_accesses for r in self.per_kernel))
 
@@ -124,6 +141,23 @@ def sweep_cells(cells: Iterable[tuple]) -> Dict[object, List[SimResult]]:
     for key, r in zip(owners, run.results):
         out.setdefault(key, []).append(r)
     return out
+
+
+def grid_app_results(grid: SweepGrid, results: Sequence[SimResult],
+                     app: str) -> Dict[tuple, AppResult]:
+    """{(arch, geom, noc): AppResult} over one grid's aligned results.
+
+    Keyed off ``grid.points`` — the authoritative point list — rather
+    than any assumed axis-enumeration order, so a reordering of
+    ``SweepGrid``'s product (or a caller-side index slip) cannot
+    silently misattribute per-cell aggregates. All of a cell's traces
+    fold into one :class:`AppResult`, in point order.
+    """
+    grouped: Dict[tuple, List[SimResult]] = {}
+    for pt, r in zip(grid.points, results):
+        grouped.setdefault((pt.arch, pt.geom, pt.noc), []).append(r)
+    return {key: AppResult(app, key[0], rs)
+            for key, rs in grouped.items()}
 
 
 def run_app(app: str, arch: str, geom: GpuGeometry = PAPER_GEOMETRY,

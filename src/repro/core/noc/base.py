@@ -1,0 +1,161 @@
+"""Interconnect-model interface for the cache-hierarchy simulator.
+
+The L1-complex interconnect — the network that carries remote-*probe*
+and remote-*data* flits between the caches of a cluster — is the
+resource the paper's whole argument is about: ATA wins by *filtering*
+that traffic. ``repro.core.noc`` makes the interconnect a pluggable
+axis, mirroring the ``repro.core.arch`` policy registry:
+
+    L1 policy stage -> L2 stage -> fill stage -> NoC stage -> timing
+
+A :class:`NocModel` receives one round's NoC traffic (one entry per
+request: serving core, requesting core, flits) plus the NoC state
+carried across rounds in the scan carry, and returns extra per-request
+delay, extra serial-resource occupancy, and the updated state. The
+memoryless per-round contention already inside the architecture
+policies (``group_rank`` over ports) stays where it is — a NoC model
+adds the *topology* effects on top: cross-round queue backpressure
+(``crossbar``), hop-distance latency and per-link hotspots (``ring``),
+or nothing at all (``ideal``, bit-exact with the pre-NoC simulator).
+
+State convention (the TagState-extension convention, applied again):
+:func:`init_noc_state` always creates the same pytree keys —
+
+    queue      : (L,) float32  flits waiting per injection port
+    link_flits : (L,) float32  cumulative flits forwarded per link/port
+    link_busy  : (L,) float32  cumulative service cycles per link/port
+    injected   : () float32    cumulative flits entering the NoC
+    delivered  : () float32    cumulative flits leaving the NoC
+    delay_sum  : () float32    summed per-request NoC delay
+    delay_n    : () float32    requests that crossed the NoC
+
+— with ``L`` sized by the *maximum* :meth:`NocModel.n_links` over the
+models compiled together (``simulator._noc_state``), so every model in
+a stacked executable carries one pytree structure and ``lax.switch``
+branches line up. A model that ignores a field must thread it through
+unchanged; ``ideal`` declares ``n_links = 0`` and only counts flits.
+
+Conservation invariant (tier-1 tested for every registered model):
+``injected == delivered + queue.sum()`` after every round and at the
+end of the simulation — backpressure may *defer* flits, never lose
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+NocState = Dict[str, jnp.ndarray]
+
+
+class NocTraffic(NamedTuple):
+    """One round's L1-complex NoC traffic, one entry per request.
+
+    ``src`` is the core whose cache serves the request (`==` ``dst``
+    when nothing crosses, or for source-side probe traffic), ``dst``
+    the requesting core. ``flits`` counts the request's probe + data
+    flits on this network (L2/write-back traffic rides the separate
+    memory-side network and is *not* routed here); ``mask`` selects the
+    requests whose critical path includes the NoC.
+    """
+    src: jnp.ndarray      # (R,) int32 serving core
+    dst: jnp.ndarray      # (R,) int32 requesting core
+    cluster: jnp.ndarray  # (R,) int32 cluster of the requesting core
+    flits: jnp.ndarray    # (R,) float32 flits injected by this request
+    mask: jnp.ndarray     # (R,) bool request traverses the NoC
+
+    @property
+    def crossing(self) -> jnp.ndarray:
+        """(R,) bool — entries that actually enter the network.
+
+        The uniform rule every model applies: traffic must be masked,
+        carry flits, and move between *distinct* cores. ``src == dst``
+        traffic never leaves the core, so no model may charge it port
+        bandwidth, hops, or queue delay — pricing it in one topology
+        but not another would skew cross-model comparisons.
+        """
+        return self.mask & (self.flits > 0) & (self.src != self.dst)
+
+
+class NocTransit(NamedTuple):
+    """What the NoC did with one round's traffic."""
+    state: NocState       # updated carried state
+    delay: jnp.ndarray    # (R,) float32 extra cycles on the request path
+    occupancy: jnp.ndarray  # (R,) float32 extra serial-resource busy time
+
+
+def init_noc_state(n_links: int) -> NocState:
+    """The carried NoC state pytree (uniform keys; see module docstring)."""
+    f = jnp.float32
+    return {
+        "queue": jnp.zeros((n_links,), f),
+        "link_flits": jnp.zeros((n_links,), f),
+        "link_busy": jnp.zeros((n_links,), f),
+        "injected": f(0.0),
+        "delivered": f(0.0),
+        "delay_sum": f(0.0),
+        "delay_n": f(0.0),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class NocModel:
+    """A pluggable interconnect model.
+
+    Subclasses implement :meth:`transit` and declare via
+    :meth:`n_links` how many link/port lanes of carried state they
+    need (given the geometry). The simulator sizes the state by the
+    maximum over the stacked group, exactly like the TagState
+    extensions, so models sharing a :attr:`stack_key` compile into one
+    executable with the active model selected by a traced index.
+    """
+    name: str
+
+    @property
+    def stack_key(self) -> str:
+        """Dataflow-group tag for sweep stacking.
+
+        Unlike architecture policies — whose round dataflow is
+        arbitrary — every NoC model carries the *same* state pytree by
+        construction (:func:`init_noc_state`), so the built-ins all
+        share the ``"noc"`` family and any grid mixing them compiles
+        one executable per architecture family. Override with your own
+        name only if your model cannot share the uniform state
+        (``SweepGrid._validate`` rejects mismatched stacks either way).
+        """
+        return "noc"
+
+    def n_links(self, geom) -> int:
+        """Link/port lanes of carried state this model uses (0 = none)."""
+        return 0
+
+    def transit(self, geom, state: NocState,
+                traffic: NocTraffic) -> NocTransit:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # shared accounting helpers
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _count(state: NocState, traffic: NocTraffic,
+               delay: jnp.ndarray, *, injected: jnp.ndarray,
+               delivered: jnp.ndarray) -> NocState:
+        """Fold one round's conservation + delay accounting into state."""
+        crossed = traffic.crossing
+        f32 = jnp.float32
+        return dict(
+            state,
+            injected=state["injected"] + injected,
+            delivered=state["delivered"] + delivered,
+            delay_sum=state["delay_sum"]
+            + jnp.sum(jnp.where(crossed, delay, 0.0)),
+            delay_n=state["delay_n"] + jnp.sum(crossed).astype(f32),
+        )
+
+
+def port_rate(geom) -> jnp.ndarray:
+    """Per-port forwarding rate (flits/cycle): the cluster's probe
+    network bandwidth shared across its cores' ports."""
+    return geom.noc_bw / geom.cluster_size

@@ -1,0 +1,76 @@
+"""Crossbar interconnect: per-port arbitration with carried backpressure.
+
+Each core's remote-data port is a crossbar output with a finite
+injection queue. Flits a request moves across the NoC arrive at the
+*serving* core's port; the port forwards at
+``port_rate = noc_bw / cluster_size`` flits/cycle for a drain window of
+``noc_drain`` cycles per round. What the window cannot forward stays in
+the port queue **across rounds** — real backpressure, unlike the
+memoryless per-round ranks inside the architecture policies — and
+occupancy beyond the ``noc_queue`` capacity stalls the port's sources
+for the overflow's drain time on top.
+
+Per-request delay =
+
+    standing backlog ahead of me   queue[port] / rate
+  + same-round flits ahead of me   group_prefix_sum(...) / rate
+  + backpressure stall             overflow[port] / rate
+
+and the port's whole supply is a serial-resource occupancy bound the
+warp scheduler cannot hide. Conservation — ``injected == delivered +
+queued`` — holds round by round; it is bit-exact while the per-round
+drain budget ``rate * noc_drain`` is an integral flit count, and holds
+to float32 accumulation error otherwise (fractional ``sent`` amounts;
+see ``NocStats``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.contention import group_prefix_sum
+from repro.core.noc.base import (NocModel, NocState, NocTraffic, NocTransit,
+                                 port_rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarNoc(NocModel):
+    name: str = "crossbar"
+
+    def n_links(self, geom) -> int:
+        return geom.n_cores          # one injection port per core
+
+    def transit(self, geom, state: NocState,
+                traffic: NocTraffic) -> NocTransit:
+        L = state["queue"].shape[0]  # >= n_links(geom) when stacked
+        rate = port_rate(geom)
+        use = traffic.crossing       # src == dst never enters the network
+        flits = jnp.where(use, traffic.flits, 0.0)
+        port = traffic.src
+
+        arrivals = jnp.zeros((L,), jnp.float32).at[port].add(flits)
+        supply = state["queue"] + arrivals
+        avail = rate * geom.noc_drain
+        sent = jnp.minimum(supply, avail)
+        queued = supply - sent
+        overflow = jnp.maximum(queued - geom.noc_queue, 0.0)
+
+        ahead, _ = group_prefix_sum(port, flits, use, L)
+        delay = jnp.where(
+            use,
+            (state["queue"][port] + ahead + overflow[port]) / rate,
+            0.0)
+        occupancy = jnp.where(use, supply[port] / rate, 0.0)
+
+        new_state = dict(
+            state,
+            queue=queued,
+            link_flits=state["link_flits"] + sent,
+            link_busy=state["link_busy"] + sent / rate,
+        )
+        new_state = self._count(new_state, traffic, delay,
+                                injected=jnp.sum(arrivals),
+                                delivered=jnp.sum(sent))
+        return NocTransit(state=new_state, delay=delay,
+                          occupancy=occupancy)

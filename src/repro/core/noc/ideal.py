@@ -1,0 +1,31 @@
+"""Ideal interconnect: infinite bandwidth, zero added latency.
+
+This is exactly the pre-NoC simulator's (implicit) interconnect — the
+architecture policies' own memoryless per-round contention is the whole
+model. ``transit`` adds zero delay and zero occupancy (``x + 0.0`` and
+``max(x, 0.0)`` are bit-exact for the non-negative timing values, so
+``noc="ideal"`` reproduces the pre-NoC simulator bit-for-bit; tier-1
+goldens pin this) and only folds the flit totals into the conservation
+counters: everything injected is delivered in the same round, nothing
+queues.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.noc.base import NocModel, NocState, NocTraffic, NocTransit
+
+
+@dataclasses.dataclass(frozen=True)
+class IdealNoc(NocModel):
+    name: str = "ideal"
+
+    def transit(self, geom, state: NocState,
+                traffic: NocTraffic) -> NocTransit:
+        zeros = jnp.zeros_like(traffic.flits)
+        total = jnp.sum(jnp.where(traffic.crossing, traffic.flits, 0.0))
+        state = self._count(state, traffic, zeros,
+                            injected=total, delivered=total)
+        return NocTransit(state=state, delay=zeros, occupancy=zeros)

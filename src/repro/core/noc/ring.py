@@ -1,0 +1,87 @@
+"""Ring interconnect: hop-distance latency + per-link flit accounting.
+
+Each cluster's cores sit on a bidirectional ring (one position per
+cluster slot); a remote transfer from serving core to requesting core
+travels the shorter arc, paying ``ring_hop`` cycles per hop, and its
+flits occupy every link along that arc. Link ``c * G + p`` connects
+cluster ``c``'s positions ``p`` and ``(p+1) % G``.
+
+Delay is the pure hop latency; the contention signal is *occupancy*:
+the busiest link on a request's path serializes the round's flit-hops
+at ``port_rate = noc_bw / cluster_size`` flits/cycle, a throughput
+bound warps cannot hide. Probe-style traffic whose serving core equals
+the requester (``src == dst``) has hop distance zero — it rides the
+dedicated probe channels the architecture policies already price in —
+so the ring specifically penalizes *data* movement between distant
+slots, which is exactly the traffic ATA's tag-side filtering avoids
+speculating on.
+
+Everything injected is delivered within the round (the ring models
+latency/hotspots, not admission control — the ``crossbar`` models
+queue backpressure), so conservation holds with an always-empty
+carried queue. ``link_flits`` counts flit-*hops* per link (the
+utilization/hotspot metric); the scalar ``injected``/``delivered``
+counters stay at injection granularity like every other model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.noc.base import (NocModel, NocState, NocTraffic, NocTransit,
+                                 port_rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingNoc(NocModel):
+    name: str = "ring"
+
+    def n_links(self, geom) -> int:
+        return geom.n_cores          # G links per cluster ring
+
+    def transit(self, geom, state: NocState,
+                traffic: NocTraffic) -> NocTransit:
+        L = state["queue"].shape[0]
+        G = geom.cluster_size
+        rate = port_rate(geom)
+        use = traffic.crossing       # src == dst never enters the network
+        flits = jnp.where(use, traffic.flits, 0.0)
+
+        s = traffic.src % G                       # (R,) slot positions
+        d = traffic.dst % G
+        fwd = (d - s) % G
+        bwd = (s - d) % G
+        go_fwd = fwd <= bwd
+        dist = jnp.minimum(fwd, bwd).astype(jnp.float32)
+
+        # Links on the shorter arc, within the request's own cluster:
+        # forward from s uses ring links s..s+fwd-1, backward uses
+        # s-1..s-bwd (all mod G), offset into the cluster's link block.
+        lpos = jnp.arange(G, dtype=jnp.int32)[None, :]        # (1, G)
+        off_f = (lpos - s[:, None]) % G
+        off_b = (s[:, None] - 1 - lpos) % G
+        on_path = jnp.where(go_fwd[:, None], off_f < fwd[:, None],
+                            off_b < bwd[:, None])             # (R, G)
+        link = traffic.cluster[:, None] * G + lpos            # (R, G)
+        hop_flits = jnp.where(on_path & use[:, None],
+                              flits[:, None], 0.0)
+        link_load = jnp.zeros((L,), jnp.float32).at[link].add(hop_flits)
+
+        # Bottleneck serialization: the busiest link on my path this
+        # round bounds my cluster-ring throughput.
+        path_load = jnp.max(
+            jnp.where(on_path, link_load[link], 0.0), axis=1)
+        delay = jnp.where(use, dist * geom.ring_hop, 0.0)
+        occupancy = jnp.where(use, path_load / rate, 0.0)
+
+        total = jnp.sum(flits)
+        new_state = dict(
+            state,
+            link_flits=state["link_flits"] + link_load,
+            link_busy=state["link_busy"] + link_load / rate,
+        )
+        new_state = self._count(new_state, traffic, delay,
+                                injected=total, delivered=total)
+        return NocTransit(state=new_state, delay=delay,
+                          occupancy=occupancy)

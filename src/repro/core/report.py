@@ -26,6 +26,9 @@ Schema history (``SCHEMA_VERSION``):
   1  solo policy-zoo cells only (``config``/``sweep``/``cells``)
   2  adds the multi-tenant ``mix`` section (its own config/sweep/cells
      from :func:`run_mix_sensitivity`); solo sections unchanged
+  3  adds the interconnect-topology ``noc`` section
+     (:func:`run_noc_sensitivity`: the zoo x {ideal, crossbar, ring} x
+     ``noc_bw``); earlier sections unchanged
 
 The gate is *forward-compatible*: a candidate at a newer schema is
 compared against an older baseline on the sections the baseline
@@ -42,11 +45,12 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.geometry import GpuGeometry, PAPER_GEOMETRY
 from repro.core.metrics import (AppResult, MixRun, app_traces,
-                                kernel_range, run_mixes)
+                                grid_app_results, kernel_range, run_mixes)
+from repro.core.noc import PAPER_NOCS
 from repro.core.sweep import SweepGrid, SweepPoint
 from repro.core.trace import WorkloadMix
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: The zoo comparison set: the paper's poles, the probe-broadcast
 #: baseline (the only ``noc_bw`` consumer), and both new policies.
@@ -68,9 +72,23 @@ CELL_METRICS = ("ipc", "l1_hit_rate", "remote_hit_rate", "noc_flits",
 MIX_ARCHS: Tuple[str, ...] = ("private", "remote", "decoupled", "ata",
                               "ciao", "victim")
 
-#: Locality pairings: high x high, high x low, low x low.
-MIX_PAIRINGS: Tuple[Tuple[str, str], ...] = (
-    ("cfd", "b+tree"), ("cfd", "HS3D"), ("HS3D", "sradv1"))
+#: ``noc_bw`` values the topology section sweeps (paper point = 16).
+NOC_BW_VALUES: Tuple[float, ...] = (4.0, 8.0, 16.0, 32.0)
+
+#: Metrics reported per (arch x noc x noc_bw) topology cell.
+#: `noc_flits_injected` is the traffic the modeled interconnect
+#: actually routes (probe + remote-data flits), not the legacy
+#: memory-side `noc_flits` total.
+NOC_CELL_METRICS = ("ipc", "l1_hit_rate", "remote_hit_rate",
+                    "noc_flits_injected", "noc_mean_queue_delay",
+                    "noc_max_link_util")
+
+#: Locality mixes: high x high, high x low, low x low pairs, plus one
+#: 3-app point (hi x hi x lo — ``WorkloadMix`` composes any app count;
+#: weighted-speedup ideal = n_apps, so 3-app cells top out at 3.0).
+MIX_PAIRINGS: Tuple[Tuple[str, ...], ...] = (
+    ("cfd", "b+tree"), ("cfd", "HS3D"), ("HS3D", "sradv1"),
+    ("cfd", "b+tree", "HS3D"))
 
 
 def mix_grid_run(pairings: Sequence[Tuple[str, ...]] = MIX_PAIRINGS,
@@ -138,6 +156,72 @@ def run_mix_sensitivity(pairings: Sequence[Tuple[str, ...]] = MIX_PAIRINGS,
     }
 
 
+def run_noc_sensitivity(app: str = "HS3D",
+                        archs: Sequence[str] = SENSITIVITY_ARCHS,
+                        nocs: Sequence[str] = PAPER_NOCS,
+                        noc_bw: Sequence[float] = NOC_BW_VALUES,
+                        kernels_per_app: Optional[int] = 1,
+                        rounds: Optional[int] = None,
+                        geom: GpuGeometry = PAPER_GEOMETRY,
+                        n_devices: Optional[int] = None) -> dict:
+    """The interconnect-topology ``noc`` report section.
+
+    One :class:`~repro.core.sweep.SweepGrid` run over
+    (arch x noc model x ``noc_bw``) — the paper's contention-
+    sensitivity story per topology: how much of each policy's win
+    survives a crossbar with real backpressure or a ring with
+    hop-distance latency, as the probe-network bandwidth shrinks. The
+    NoC axis stacks (all built-ins share one model family), so the
+    whole section compiles one executable per architecture family.
+    Cells carry the solo metrics plus the interconnect block's queue
+    delay and hotspot link utilization; the section keeps its own
+    ``sweep`` accounting so the solo regression gate is unaffected.
+
+    Deliberate trade-off: the ``ideal`` rows at ``noc_bw`` values the
+    solo section also sweeps re-simulate those points rather than
+    borrowing the solo results. The redundant work is only the device
+    time of a handful of cells inside a stacked executable the
+    crossbar/ring rows need compiled anyway, and it keeps the two
+    sections' sweep accounting (and therefore the regression gate's
+    per-section executable budgets) fully independent.
+    """
+    archs = tuple(archs)
+    nocs = tuple(nocs)
+    traces = app_traces(app, geom, kernel_range(app, kernels_per_app),
+                       rounds=rounds)
+    geoms = [dataclasses.replace(geom, noc_bw=v) for v in noc_bw]
+    grid = SweepGrid(archs, geoms, traces, nocs=nocs)
+    run = grid.run(n_devices=n_devices)
+    agg = grid_app_results(grid, run.results, app)
+    cells = []
+    for arch in archs:
+        for v, g in zip(noc_bw, geoms):
+            for noc in nocs:
+                cell = {"arch": arch, "noc": noc, "noc_bw": v}
+                for metric in NOC_CELL_METRICS:
+                    cell[metric] = float(getattr(agg[(arch, g, noc)],
+                                                 metric))
+                cells.append(cell)
+    return {
+        "config": {
+            "app": app,
+            "archs": list(archs),
+            "nocs": list(nocs),
+            "noc_bw": list(noc_bw),
+            "kernels_per_app": kernels_per_app,
+            "rounds": rounds,
+        },
+        "sweep": {
+            "n_points": run.report.n_points,
+            "n_executables": run.report.n_executables,
+            "n_compiles": run.report.n_compiles,
+            "n_devices": run.report.n_devices,
+            "wall_s": round(run.report.wall_s, 3),
+        },
+        "cells": cells,
+    }
+
+
 def run_sensitivity(app: str = "HS3D",
                     archs: Sequence[str] = SENSITIVITY_ARCHS,
                     knobs: Optional[Dict[str, Tuple]] = None,
@@ -147,15 +231,18 @@ def run_sensitivity(app: str = "HS3D",
                     n_devices: Optional[int] = None,
                     mix_pairings: Optional[Sequence[Tuple[str, ...]]]
                     = None,
-                    mix_run: Optional[MixRun] = None) -> dict:
+                    mix_run: Optional[MixRun] = None,
+                    noc_models: Optional[Sequence[str]] = None) -> dict:
     """One grid run over (arch x knob-value x kernel); report dict out.
 
     ``mix_pairings`` (e.g. ``MIX_PAIRINGS``) adds the multi-tenant
     ``mix`` section (schema 2; ``benchmarks.run --report-json`` passes
     it, with ``mix_run`` reusing the grid run the fairness figure
-    already paid for) — the solo sections are unchanged either way and
-    keep their own ``sweep`` accounting, so a schema-1 baseline still
-    gates them.
+    already paid for); ``noc_models`` (e.g. ``PAPER_NOCS``) adds the
+    interconnect-topology ``noc`` section (schema 3,
+    :func:`run_noc_sensitivity`) — the solo sections are unchanged
+    either way and keep their own ``sweep`` accounting, so a schema-1
+    baseline still gates them.
     """
     knobs = dict(SENSITIVITY_KNOBS if knobs is None else knobs)
     archs = tuple(archs)
@@ -189,11 +276,13 @@ def run_sensitivity(app: str = "HS3D",
         cells.append(cell)
 
     report = {
-        # The schema tag reflects the sections actually present: a
-        # solo-only report is (and gates as) schema 1, so a baseline
-        # regenerated without mixes can never silently claim mix
-        # coverage while un-gating it.
-        "schema": SCHEMA_VERSION if mix_pairings else 1,
+        # The schema tag is the highest *contiguous* coverage level
+        # actually present (sections themselves are gated by presence):
+        # schema 3 requires both mix and noc sections, so a noc-only
+        # report cannot claim 3 while silently dropping mix coverage —
+        # nor spuriously reject a schema-2 candidate that carries it.
+        "schema": (3 if (mix_pairings and noc_models)
+                   else 2 if mix_pairings else 1),
         "config": {
             "app": app,
             "archs": list(archs),
@@ -214,6 +303,10 @@ def run_sensitivity(app: str = "HS3D",
         report["mix"] = run_mix_sensitivity(
             mix_pairings, rounds=rounds, geom=geom, n_devices=n_devices,
             mix_run=mix_run)
+    if noc_models:
+        report["noc"] = run_noc_sensitivity(
+            app, archs, noc_models, kernels_per_app=kernels_per_app,
+            rounds=rounds, geom=geom, n_devices=n_devices)
     return report
 
 
@@ -255,6 +348,24 @@ def to_markdown(report: dict) -> str:
                 f"| {c['mix']} | {c['arch']} "
                 f"| {c['weighted_speedup']:.3f} | {c['unfairness']:.3f} "
                 f"| {c['ipc']:.2f} |")
+    noc = report.get("noc")
+    if noc:
+        lines += [
+            "",
+            "## Interconnect topology sensitivity",
+            "",
+            f"models: {', '.join(noc['config']['nocs'])} · "
+            f"noc_bw: {', '.join(f'{v:g}' for v in noc['config']['noc_bw'])}"
+            f" · executables: {noc['sweep']['n_executables']}",
+            "",
+            "| arch | noc | noc_bw | IPC | queue delay | hotspot util |",
+            "|---|---|---|---|---|---|",
+        ]
+        for c in noc["cells"]:
+            lines.append(
+                f"| {c['arch']} | {c['noc']} | {c['noc_bw']:g} "
+                f"| {c['ipc']:.3f} | {c['noc_mean_queue_delay']:.2f} "
+                f"| {c['noc_max_link_util']:.4f} |")
     return "\n".join(lines) + "\n"
 
 
@@ -284,6 +395,10 @@ def _cell_key(cell: dict) -> tuple:
 
 def _mix_cell_key(cell: dict) -> tuple:
     return (cell["mix"], cell["arch"])
+
+
+def _noc_cell_key(cell: dict) -> tuple:
+    return (cell["arch"], cell["noc"], cell["noc_bw"])
 
 
 def _compare_section(failures: List[str], baseline: dict, candidate: dict,
@@ -324,10 +439,11 @@ def compare_reports(baseline: dict, candidate: dict, *,
     Schema compatibility: a candidate at a **newer** schema than the
     baseline is legal — the gate compares the sections and config keys
     the baseline carries and ignores candidate-only additions (e.g. a
-    schema-1 baseline gates a schema-2 candidate on its solo cells and
-    tolerates the new ``mix`` section). The ``mix`` section is gated
-    (on ``weighted_speedup`` drift and its own executable count) only
-    when both reports carry it.
+    schema-1 baseline gates a schema-2/3 candidate on its solo cells
+    and tolerates the new ``mix``/``noc`` sections). The ``mix``
+    section is gated (on ``weighted_speedup`` drift and its own
+    executable count) only when both reports carry it, and likewise
+    the ``noc`` topology section (on per-cell IPC drift).
     """
     failures: List[str] = []
     base_schema = baseline.get("schema")
@@ -356,4 +472,13 @@ def compare_reports(baseline: dict, candidate: dict, *,
                              metric="weighted_speedup",
                              metric_label="weighted-speedup",
                              rtol=ipc_rtol, label="mix")
+    if "noc" in baseline:
+        if "noc" not in candidate:
+            failures.append("noc section missing from candidate "
+                            "(baseline carries one)")
+        else:
+            _compare_section(failures, baseline["noc"], candidate["noc"],
+                             key_fn=_noc_cell_key, metric="ipc",
+                             metric_label="IPC", rtol=ipc_rtol,
+                             label="noc")
     return failures

@@ -3,11 +3,18 @@
 One ``lax.scan`` step models one *round*: every core issues ``m`` memory
 requests (one coalesced load instruction). A round is a pipeline
 
-    L1 policy stage  ->  shared L2 stage  ->  L1 fill stage  ->  timing
+    L1 policy stage -> shared L2 stage -> L1 fill stage -> NoC stage
+                                                        -> timing
 
-where only the first stage differs between architectures. The policies
-live in ``repro.core.arch`` (one module each) and plug in through a
-registry, so new contention-mitigation schemes need no edits here:
+where only the first stage differs between architectures, and the NoC
+stage routes the round's remote-probe/remote-data flits through a
+pluggable interconnect model (``repro.core.noc``: ``ideal`` — the
+default, bit-exact with the pre-NoC simulator — ``crossbar`` with
+carried per-port queue backpressure, ``ring`` with hop-distance
+latency; per-link occupancy/delay accumulate in the scan carry and
+surface as ``SimResult.noc``). The policies live in ``repro.core.arch``
+(one module each) and plug in through a registry, so new
+contention-mitigation schemes need no edits here:
 
   private    : local L1 -> L2
   remote     : local L1 -> broadcast probes to cluster peers (NoC queue +
@@ -63,6 +70,8 @@ from repro.core.contention import group_rank
 from repro.core.geometry import (GEOM_SCALAR_FIELDS, GeomScalars,
                                  GeomStructure, GpuGeometry, PAPER_GEOMETRY,
                                  TracedGeometry, split_geometry)
+from repro.core.noc import (NocModel, NocTraffic, get_noc, init_noc_state,
+                            registered_nocs)
 
 #: Backwards-compatible alias: the paper's comparison set. The full,
 #: extensible set is ``repro.core.arch.registered_archs()``.
@@ -228,6 +237,41 @@ class AppStats(NamedTuple):
             else float("nan")
 
 
+class NocStats(NamedTuple):
+    """Interconnect block of one simulation (``repro.core.noc``).
+
+    Conservation counters are at injection granularity —
+    ``flits_injected == flits_delivered + flits_queued`` holds after
+    every round and at end-of-sim for every registered model (tier-1
+    tested), up to float32 accumulation error when the per-port drain
+    rate is not exactly representable (e.g. ``noc_bw/cluster_size =
+    0.2``): backpressure may *defer* flits, never lose them.
+    Utilizations normalize per-link busy cycles by the run's
+    completion time; ``max_link_util`` is the hotspot link. The flit
+    counters track traffic under every model (``ideal`` delivers
+    everything instantly: ``injected == delivered``, ``queued == 0``);
+    the *queueing and utilization* fields are 0.0 under ``ideal`` (no
+    links, no delay), so solo and grid-stacked runs agree exactly
+    regardless of how large a stacked sibling sized the carried link
+    arrays.
+    """
+    flits_injected: float
+    flits_delivered: float
+    flits_queued: float        # still in a port queue at end-of-sim
+    mean_queue_delay: float    # mean NoC delay over crossing requests
+    max_link_util: float       # hotspot: busiest link busy / cycles
+    mean_link_util: float      # mean busy / cycles over *active* links
+
+    @property
+    def conserved(self) -> bool:
+        drift = abs(self.flits_injected
+                    - (self.flits_delivered + self.flits_queued))
+        return drift <= max(1e-6 * self.flits_injected, 1e-3)
+
+
+_ZERO_NOC = NocStats(0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+
 class SimResult(NamedTuple):
     ipc: float
     l1_latency: float          # mean per-load L1-complex completion time
@@ -242,6 +286,8 @@ class SimResult(NamedTuple):
     #: per-app attribution (one AppStats per mix slot; a single entry
     #: covering every core for solo traces)
     per_app: Tuple[AppStats, ...] = ()
+    #: interconnect metrics (all-zero under the default ``ideal`` model)
+    noc: NocStats = _ZERO_NOC
 
 
 def _l1_state(geom, policies: Sequence[ArchPolicy]) -> tagarray.TagState:
@@ -263,6 +309,17 @@ def _l2_state(geom) -> tagarray.TagState:
     return tagarray.init_tag_state(geom.l2_parts, geom.l2_sets, geom.l2_ways)
 
 
+def _noc_state(geom, models: Sequence[NocModel]):
+    """Carried NoC state sized for a whole stacked model group.
+
+    Mirrors :func:`_l1_state`: the link/queue arrays take the *maximum*
+    ``n_links`` the group's models declare, so stacked members share
+    one state pytree; a model that ignores the arrays (``ideal``) is
+    bit-exact whether they are zero-sized or not.
+    """
+    return init_noc_state(max(m.n_links(geom) for m in models))
+
+
 def _request_batch(geom, addr, is_write) -> RequestBatch:
     """Flatten one round's (C, m) requests and derive routing indices."""
     C, m = addr.shape
@@ -281,16 +338,21 @@ def _request_batch(geom, addr, is_write) -> RequestBatch:
                         set_idx=set_idx, bank=bank, peers=peers)
 
 
-def _round(policy: ArchPolicy, geom, insn_per_req, core_app, state, xs):
-    """One simulation round. state=(l1, l2, t, stats); xs=(addr, is_write).
+def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
+           geom, insn_per_req, core_app, state, xs):
+    """One simulation round. state=(l1, l2, noc, t, stats);
+    xs=(addr, is_write).
 
     ``geom`` is a :class:`TracedGeometry` view (or a concrete
     ``GpuGeometry``): structure fields are static, timing scalars may be
     tracers. ``insn_per_req`` is a scalar or (C,) vector; ``core_app``
     is the (C,) int32 app-id channel feeding the per-app attribution
-    scatter-adds (all zeros for solo traces).
+    scatter-adds (all zeros for solo traces). ``nocs`` is the stacked
+    interconnect-model group compiled into this executable; the traced
+    ``noc_idx`` selects the active one (``lax.switch`` when the group
+    has more than one member).
     """
-    l1, l2, t, stats = state
+    l1, l2, noc, t, stats = state
     addr, is_write = xs                      # (C, m)
     C, m = addr.shape
     reqs = _request_batch(geom, addr, is_write)
@@ -329,8 +391,32 @@ def _round(policy: ArchPolicy, geom, insn_per_req, core_app, state, xs):
                            fill_mask, dirty=reqs.is_write)
     noc_flits = noc_flits + jnp.sum(wb) * geom.flits_per_line
 
+    # ---- NoC stage: remote-probe/remote-data flits through the active
+    # interconnect model (repro.core.noc). The policies' own memoryless
+    # per-round contention stays put; the model adds topology effects —
+    # cross-round queue backpressure, hop latency, link hotspots — and
+    # the `ideal` model adds exactly zero (bit-exact with the pre-NoC
+    # simulator).
+    req_flits = out.noc_req_flits
+    if req_flits is None:
+        req_flits = out.remote_hits * (geom.flits_per_line * 1.0)
+    req_flits = jnp.asarray(req_flits, jnp.float32)
+    traffic = NocTraffic(
+        src=out.noc_src if out.noc_src is not None else reqs.core,
+        dst=reqs.core, cluster=reqs.cluster, flits=req_flits,
+        mask=req_flits > 0)
+    if len(nocs) == 1:
+        transit = nocs[0].transit(geom, noc, traffic)
+    else:
+        transit = jax.lax.switch(
+            noc_idx, [functools.partial(m.transit, geom) for m in nocs],
+            noc, traffic)
+    noc = transit.state
+    occupancy = jnp.maximum(occupancy, transit.occupancy)
+
     # ---- timing ------------------------------------------------------------
-    latency = jnp.where(out.served, out.l1_time, out.pre_l2 + l2_time)  # (R,)
+    latency = (jnp.where(out.served, out.l1_time, out.pre_l2 + l2_time)
+               + transit.delay)                                     # (R,)
     # Warp multithreading hides individual request latencies; the core's
     # sustained pace is set by *mean* outstanding latency per load, while
     # serial-resource occupancy is a hard throughput bound (max over m).
@@ -341,9 +427,11 @@ def _round(policy: ArchPolicy, geom, insn_per_req, core_app, state, xs):
                              per_core_lat / geom.hide)         # (C,)
 
     # Fig.10 metric: completion time of the L1 accesses of one load
-    # instruction, over loads fully served by the L1 complex.
+    # instruction, over loads fully served by the L1 complex. The NoC
+    # transit delay of a remote hit is part of that completion time
+    # (exactly 0.0 under `ideal`, so the golden pins are unaffected).
     all_served = out.served.reshape(C, m).all(axis=1)
-    l1_complete = out.l1_time.reshape(C, m).max(axis=1)
+    l1_complete = (out.l1_time + transit.delay).reshape(C, m).max(axis=1)
 
     # Per-app attribution: hit counters scatter-add by the issuing
     # core's app id inside the existing carry (hit counts are small
@@ -371,7 +459,7 @@ def _round(policy: ArchPolicy, geom, insn_per_req, core_app, state, xs):
         "app_lat_n": stats["app_lat_n"]
         .at[core_app].add(all_served.astype(f32)),
     }
-    return (l1, l2, t + 1, stats), None
+    return (l1, l2, noc, t + 1, stats), None
 
 
 def _init_stats(geom, n_apps: int = 1) -> Dict[str, jnp.ndarray]:
@@ -385,46 +473,54 @@ def _init_stats(geom, n_apps: int = 1) -> Dict[str, jnp.ndarray]:
             "app_lat_sum": app, "app_lat_n": app}
 
 
-def _sim_core(archs: Tuple[str, ...], point_arrays,
+def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
               structure: GeomStructure, n_apps: int = 1):
     """Scan one grid point through the round pipeline.
 
     ``archs`` is a *dataflow group*: one or more same-dataflow
     architectures compiled together, the active one selected per point
-    by the traced ``policy_idx`` (``lax.switch`` over the round step).
-    ``point_arrays = (addr, is_write, insn_per_req, core_app, scalars,
-    policy_idx)`` — everything but ``archs``/``structure``/``n_apps``
-    is traced, so one executable serves whole (policy, timing-geometry,
-    trace) grids; ``n_apps`` sizes the per-app attribution accumulators
-    (static — mixes with the same app count share executables).
+    by the traced ``policy_idx`` (``lax.switch`` over the round step);
+    ``nocs`` is the stacked interconnect-model group, selected by the
+    traced ``noc_idx`` the same way (an inner switch over the NoC
+    stage). ``point_arrays = (addr, is_write, insn_per_req, core_app,
+    scalars, policy_idx, noc_idx)`` — everything but ``archs``/
+    ``nocs``/``structure``/``n_apps`` is traced, so one executable
+    serves whole (policy, NoC, timing-geometry, trace) grids;
+    ``n_apps`` sizes the per-app attribution accumulators (static —
+    mixes with the same app count share executables).
     """
-    addr, is_write, insn_per_req, core_app, scalars, policy_idx = \
-        point_arrays
+    addr, is_write, insn_per_req, core_app, scalars, policy_idx, \
+        noc_idx = point_arrays
     geom = TracedGeometry(structure, scalars)
     policies = [get_arch(a) for a in archs]
-    state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
+    noc_models = [get_noc(n) for n in nocs]
+    state = (_l1_state(geom, policies), _l2_state(geom),
+             _noc_state(geom, noc_models), jnp.int32(0),
              _init_stats(geom, n_apps))
-    steps = [functools.partial(_round, p, geom, insn_per_req, core_app)
+    steps = [functools.partial(_round, p, noc_models, noc_idx, geom,
+                               insn_per_req, core_app)
              for p in policies]
     if len(steps) == 1:
         step = steps[0]
     else:
         def step(carry, xs):
             return jax.lax.switch(policy_idx, steps, carry, xs)
-    (l1, l2, t, stats), _ = jax.lax.scan(step, state, (addr, is_write))
-    return stats
+    (l1, l2, noc, t, stats), _ = jax.lax.scan(step, state,
+                                              (addr, is_write))
+    return {**stats, "noc": noc}
 
 
-#: One compilation per (arch group, trace shape, geometry structure,
-#: app count).
-_simulate = jax.jit(_sim_core, static_argnums=(0, 2, 3))
+#: One compilation per (arch group, NoC group, trace shape, geometry
+#: structure, app count).
+_simulate = jax.jit(_sim_core, static_argnums=(0, 1, 3, 4))
 
 #: Batched form: vmap over a leading grid-point axis, still one
 #: compilation. ``repro.core.sweep`` adds device sharding on top.
 _simulate_batch = jax.jit(
-    lambda archs, point_arrays, structure, n_apps: jax.vmap(
-        lambda pa: _sim_core(archs, pa, structure, n_apps))(point_arrays),
-    static_argnums=(0, 2, 3))
+    lambda archs, nocs, point_arrays, structure, n_apps: jax.vmap(
+        lambda pa: _sim_core(archs, nocs, pa, structure,
+                             n_apps))(point_arrays),
+    static_argnums=(0, 1, 3, 4))
 
 
 def _trace_arrays(trace: Trace):
@@ -439,40 +535,51 @@ def _trace_arrays(trace: Trace):
     return addr, is_write, insn, core_app
 
 
-def _point_arrays(trace_like, scalars, policy_idx=0):
+def _point_arrays(trace_like, scalars, policy_idx=0, noc_idx=0):
     """Pack one grid point's traced leaves for :func:`_sim_core`."""
     addr, is_write, insn, core_app = trace_like
     return (addr, is_write, insn, core_app, scalars,
-            jnp.int32(policy_idx))
+            jnp.int32(policy_idx), jnp.int32(noc_idx))
 
 
 def round_signature(group: Tuple[str, ...], arch: str,
                     structure: GeomStructure,
                     round_shape: Tuple[int, int],
                     insn_shape: Tuple[int, ...] = (),
-                    n_apps: int = 1):
+                    n_apps: int = 1,
+                    noc_group: Tuple[str, ...] = ("ideal",),
+                    noc: str = "ideal"):
     """Abstract shape/dtype pytree of one scanned round of ``arch``.
 
     The round is evaluated (``jax.eval_shape`` — no compilation, no
-    FLOPs) with the L1 state sized for the whole dataflow ``group``,
-    exactly as :func:`_sim_core` would compile it. Policies that may
-    stack into one executable must produce identical signatures — the
-    carried state pytrees are what ``lax.switch`` requires to line up —
-    and ``repro.core.sweep.SweepGrid`` validates that with this
-    function before it buckets a grid. ``insn_shape``/``n_apps`` mirror
-    the trace's instruction-intensity shape and app count: mixes carry
-    per-app accumulators in the same pytree.
+    FLOPs) with the L1 state sized for the whole dataflow ``group``
+    and the NoC state sized for the whole ``noc_group``, exactly as
+    :func:`_sim_core` would compile them. Policies (and NoC models)
+    that may stack into one executable must produce identical
+    signatures — the carried state pytrees are what ``lax.switch``
+    requires to line up — and ``repro.core.sweep.SweepGrid`` validates
+    that with this function before it buckets a grid.
+    ``insn_shape``/``n_apps`` mirror the trace's instruction-intensity
+    shape and app count: mixes carry per-app accumulators in the same
+    pytree.
     """
     C, m = round_shape
     policies = [get_arch(a) for a in group]
+    noc_models = [get_noc(n) for n in noc_group]
     scalars = GeomScalars(*(jax.ShapeDtypeStruct((), jnp.float32)
                             for _ in GEOM_SCALAR_FIELDS))
 
     def one_round(scalars, addr, is_write, insn, core_app):
         geom = TracedGeometry(structure, scalars)
-        state = (_l1_state(geom, policies), _l2_state(geom), jnp.int32(0),
+        state = (_l1_state(geom, policies), _l2_state(geom),
+                 _noc_state(geom, noc_models), jnp.int32(0),
                  _init_stats(geom, n_apps))
-        new_state, _ = _round(get_arch(arch), geom, insn, core_app,
+        # evaluate the *selected* (arch, noc) member's round over state
+        # sized for the full groups — members whose dataflow diverges
+        # from the group produce a different signature here instead of
+        # an opaque lax.switch failure inside the compiled executable
+        new_state, _ = _round(get_arch(arch), [get_noc(noc)], jnp.int32(0),
+                              geom, insn, core_app,
                               state, (addr, is_write))
         return new_state
 
@@ -498,6 +605,21 @@ def _summarize(stats, trace: Trace) -> SimResult:
     local = float(stats["local_hits"])
     remote = float(stats["remote_hits"])
     lat_n = float(stats["l1_lat_n"])
+
+    ns = stats["noc"]
+    busy = np.asarray(ns["link_busy"], np.float64)
+    active = int((busy > 0).sum())
+    delay_n = float(ns["delay_n"])
+    noc_block = NocStats(
+        flits_injected=float(ns["injected"]),
+        flits_delivered=float(ns["delivered"]),
+        flits_queued=float(np.asarray(ns["queue"], np.float64).sum()),
+        mean_queue_delay=(float(ns["delay_sum"]) / delay_n if delay_n
+                          else 0.0),
+        max_link_util=(float(busy.max()) / cycles if busy.size else 0.0),
+        mean_link_util=(float(busy.sum()) / (cycles * active) if active
+                        else 0.0),
+    )
 
     ids = trace.core_app_ids
     insn_vec = trace.insn_vector
@@ -530,12 +652,18 @@ def _summarize(stats, trace: Trace) -> SimResult:
         cycles=cycles,
         instructions=instructions,
         per_app=tuple(per_app),
+        noc=noc_block,
     )
 
 
 def _check_arch(arch: str) -> None:
     if arch not in registered_archs():
         raise ValueError(f"arch must be one of {registered_archs()}")
+
+
+def _check_noc(noc: str) -> None:
+    if noc not in registered_nocs():
+        raise ValueError(f"noc must be one of {registered_nocs()}")
 
 
 def trace_kind(trace: Trace) -> tuple:
@@ -546,18 +674,25 @@ def trace_kind(trace: Trace) -> tuple:
 
 
 def simulate(arch: str, trace: Trace,
-             geom: GpuGeometry = PAPER_GEOMETRY) -> SimResult:
-    """Run a trace through one architecture and summarize."""
+             geom: GpuGeometry = PAPER_GEOMETRY, *,
+             noc: str = "ideal") -> SimResult:
+    """Run a trace through one architecture and summarize.
+
+    ``noc`` selects the interconnect model (``repro.core.noc``); the
+    default ``ideal`` reproduces the pre-NoC simulator bit-exactly.
+    """
     _check_arch(arch)
+    _check_noc(noc)
     structure, scalars = split_geometry(geom)
     stats = jax.device_get(_simulate(
-        (arch,), _point_arrays(_trace_arrays(trace), scalars), structure,
-        trace.n_apps))
+        (arch,), (noc,), _point_arrays(_trace_arrays(trace), scalars),
+        structure, trace.n_apps))
     return _summarize(stats, trace)
 
 
 def simulate_batch(arch: str, traces: Sequence[Trace],
-                   geom: GpuGeometry = PAPER_GEOMETRY) -> List[SimResult]:
+                   geom: GpuGeometry = PAPER_GEOMETRY, *,
+                   noc: str = "ideal") -> List[SimResult]:
     """Run many same-shape traces through one architecture in one call.
 
     The traces are stacked on a new leading axis and the scanned
@@ -569,6 +704,7 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
     grouping.
     """
     _check_arch(arch)
+    _check_noc(noc)
     if not traces:
         return []
     kinds = {trace_kind(t) for t in traces}
@@ -591,24 +727,26 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
                            jnp.int32)
     batched = ((addr, is_write, insn, core_app,
                 jax.tree.map(lambda s: jnp.broadcast_to(s, (B,)), scalars),
-                jnp.zeros((B,), jnp.int32)))
-    stats = jax.device_get(_simulate_batch((arch,), batched, structure,
-                                           n_apps))
+                jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32)))
+    stats = jax.device_get(_simulate_batch((arch,), (noc,), batched,
+                                           structure, n_apps))
     return [_summarize(jax.tree.map(lambda a: a[b], stats), traces[b])
             for b in range(len(traces))]
 
 
 def simulate_many(arch: str, traces: Sequence[Trace],
-                  geom: GpuGeometry = PAPER_GEOMETRY) -> List[SimResult]:
+                  geom: GpuGeometry = PAPER_GEOMETRY, *,
+                  noc: str = "ideal") -> List[SimResult]:
     """``simulate_batch`` over arbitrary traces: group by kind, preserve
     input order."""
     _check_arch(arch)
+    _check_noc(noc)
     groups: Dict[tuple, List[int]] = {}
     for i, t in enumerate(traces):
         groups.setdefault(trace_kind(t), []).append(i)
     out: List[SimResult] = [None] * len(traces)  # type: ignore[list-item]
     for idxs in groups.values():
         for i, r in zip(idxs, simulate_batch(
-                arch, [traces[i] for i in idxs], geom)):
+                arch, [traces[i] for i in idxs], geom, noc=noc)):
             out[i] = r
     return out

@@ -1,10 +1,12 @@
 """Device-sharded, multi-axis parameter-grid sweep engine.
 
-:class:`SweepGrid` takes a cartesian grid over three axes —
+:class:`SweepGrid` takes a cartesian grid over four axes —
 
     archs   : architecture-policy names (``repro.core.arch`` registry)
     geoms   : :class:`GpuGeometry` points
     traces  : :class:`Trace` points (e.g. all kernels of an app)
+    nocs    : interconnect-model names (``repro.core.noc`` registry;
+              defaults to the bit-exact ``ideal``)
 
 — and runs every point through the round-pipeline simulator while
 compiling as few executables as possible:
@@ -29,10 +31,14 @@ compiling as few executables as possible:
   ``repro.sharding.compat.shard_map``, so an N-device host runs N grid
   points at a time per dispatch.
 
-An executable is therefore keyed by (arch dataflow group, geometry
-structure, trace *kind* = shape + insn shape + app count, padded batch
-size, device count); everything else — policy choice, timing scalars,
-addresses, instruction mix, app-to-core assignment — is data.
+An executable is therefore keyed by (arch dataflow group, NoC model
+group, geometry structure, trace *kind* = shape + insn shape + app
+count, padded batch size, device count); everything else — policy
+choice, NoC choice, timing scalars, addresses, instruction mix,
+app-to-core assignment — is data. NoC models stack exactly like
+policy families (``NocModel.stack_key``; the built-ins all share one
+family), so an (arch zoo x {ideal, crossbar, ring}) grid compiles one
+executable per architecture family, not per topology.
 Multi-tenant mixes (``repro.core.trace.WorkloadMix``) are ordinary
 grid points: same-shape mixes share one executable per dataflow group.
 Results are bit-identical to running :func:`repro.core.simulate`
@@ -51,18 +57,25 @@ import numpy as np
 
 from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
                                  geom_structure, split_geometry)
-from repro.core.simulator import (SimResult, Trace, _check_arch, _sim_core,
-                                  _summarize, round_signature, trace_kind)
+from repro.core.simulator import (SimResult, Trace, _check_arch, _check_noc,
+                                  _sim_core, _summarize, round_signature,
+                                  trace_kind)
 from repro.core.arch import get_arch, registered_archs
+from repro.core.noc import get_noc, registered_nocs
 from repro.sharding.compat import make_mesh_1d, shard_map
 from jax.sharding import PartitionSpec as P
 
 
 class SweepPoint(NamedTuple):
-    """One (arch, geometry, trace) grid point."""
+    """One (arch, geometry, trace[, noc]) grid point.
+
+    ``noc`` selects the interconnect model (``repro.core.noc``); the
+    default ``ideal`` keeps every pre-NoC grid bit-exact.
+    """
     arch: str
     geom: GpuGeometry
     trace: Trace
+    noc: str = "ideal"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,17 +111,18 @@ def compile_count() -> int:
     return len(_COMPILED_KEYS)
 
 
-def _sharded_executable(group: Tuple[str, ...], structure: GeomStructure,
+def _sharded_executable(group: Tuple[str, ...], nocs: Tuple[str, ...],
+                        structure: GeomStructure,
                         n_devices: int, n_apps: int):
     """The jitted, device-sharded, vmapped simulator for one bucket."""
-    key = (group, structure, n_devices, n_apps)
+    key = (group, nocs, structure, n_devices, n_apps)
     fn = _EXEC_MEMO.get(key)
     if fn is None:
         mesh = make_mesh_1d(n_devices, "grid")
 
         def local_batch(point_arrays):
             return jax.vmap(
-                lambda pa: _sim_core(group, pa, structure,
+                lambda pa: _sim_core(group, nocs, pa, structure,
                                      n_apps))(point_arrays)
 
         fn = jax.jit(shard_map(local_batch, mesh=mesh,
@@ -135,25 +149,51 @@ def _canonical_group(archs: Iterable[str]) -> Tuple[str, ...]:
     return tuple(sorted(archs, key=lambda a: order[a]))
 
 
+def _canonical_noc_group(nocs: Iterable[str]) -> Tuple[str, ...]:
+    """NoC stacking family, ordered by registry position (see above)."""
+    order = {name: i for i, name in enumerate(registered_nocs())}
+    return tuple(sorted(nocs, key=lambda n: order[n]))
+
+
+def _stack_groups(names: Iterable[str], stack_key_of, canonical
+                  ) -> Dict[str, Tuple[str, ...]]:
+    """{name: canonical stacked group} over names sharing a stack_key."""
+    by_key: Dict[str, List[str]] = {}
+    for name in names:
+        fam = by_key.setdefault(stack_key_of(name), [])
+        if name not in fam:
+            fam.append(name)
+    out: Dict[str, Tuple[str, ...]] = {}
+    for fam in by_key.values():
+        group = canonical(fam)
+        for name in fam:
+            out[name] = group
+    return out
+
+
 #: Memoized abstract round signatures (eval_shape is cheap, not free).
 _SIG_MEMO: Dict[tuple, object] = {}
 
 
 def _signature(group: Tuple[str, ...], arch: str, structure: GeomStructure,
                round_shape: Tuple[int, int],
-               insn_shape: Tuple[int, ...] = (), n_apps: int = 1):
-    key = (group, arch, structure, round_shape, insn_shape, n_apps)
+               insn_shape: Tuple[int, ...] = (), n_apps: int = 1,
+               noc_group: Tuple[str, ...] = ("ideal",),
+               noc: str = "ideal"):
+    key = (group, arch, structure, round_shape, insn_shape, n_apps,
+           noc_group, noc)
     if key not in _SIG_MEMO:
         _SIG_MEMO[key] = round_signature(group, arch, structure,
-                                         round_shape, insn_shape, n_apps)
+                                         round_shape, insn_shape, n_apps,
+                                         noc_group, noc)
     return _SIG_MEMO[key]
 
 
 class SweepGrid:
-    """A cartesian (arch x geometry x trace) grid and its sweep engine.
+    """A cartesian (arch x geometry x noc x trace) grid and its engine.
 
-    ``SweepGrid(archs, geoms, traces)`` enumerates the full product with
-    the trace axis fastest and the arch axis slowest;
+    ``SweepGrid(archs, geoms, traces, nocs)`` enumerates the full
+    product with the trace axis fastest and the arch axis slowest;
     :meth:`from_points` accepts an arbitrary point list instead (the
     engine re-buckets internally either way). :meth:`run` returns the
     per-point :class:`SimResult` list aligned with :attr:`points`, plus
@@ -162,12 +202,13 @@ class SweepGrid:
 
     def __init__(self, archs: Sequence[str],
                  geoms: Optional[Sequence[GpuGeometry]] = None,
-                 traces: Sequence[Trace] = ()):
+                 traces: Sequence[Trace] = (),
+                 nocs: Sequence[str] = ("ideal",)):
         geoms = list(geoms) if geoms is not None else [PAPER_GEOMETRY]
         traces = list(traces)   # tolerate one-shot iterables
         self.points: List[SweepPoint] = [
-            SweepPoint(a, g, t)
-            for a in archs for g in geoms for t in traces]
+            SweepPoint(a, g, t, n)
+            for a in archs for g in geoms for n in nocs for t in traces]
         self._validate()
 
     @classmethod
@@ -180,6 +221,8 @@ class SweepGrid:
     def _validate(self) -> None:
         for arch in {p.arch for p in self.points}:
             _check_arch(arch)
+        for noc in {p.noc for p in self.points}:
+            _check_noc(noc)
         seen = set()
         for p in self.points:
             if id(p.geom) not in seen:
@@ -187,43 +230,78 @@ class SweepGrid:
                 _validate_geom(p.geom)
         self._validate_stacking()
 
+    def _noc_group_of(self) -> Dict[str, Tuple[str, ...]]:
+        """{noc name: canonical stacked NoC group} over this grid."""
+        return _stack_groups({p.noc for p in self.points},
+                             lambda n: get_noc(n).stack_key,
+                             _canonical_noc_group)
+
     def _validate_stacking(self) -> None:
         """Reject stack_key families whose members' dataflow diverges.
 
-        Architectures sharing a ``stack_key`` promise an identical round
-        dataflow (same carried state pytree) so the engine may compile
-        them into one switch-selected executable. A new policy that
-        claims an existing family's key but, say, threads an extra
-        state array would fail deep inside ``lax.switch`` with an
-        opaque shape error — catch it here, per (family, geometry
-        structure, round shape) actually swept together, with a message
-        that names the offending architecture.
+        Architectures (and NoC models) sharing a ``stack_key`` promise
+        an identical round dataflow (same carried state pytree) so the
+        engine may compile them into one switch-selected executable. A
+        new policy or model that claims an existing family's key but,
+        say, threads an extra state array would fail deep inside
+        ``lax.switch`` with an opaque shape error — catch it here, per
+        (family, geometry structure, round shape) actually swept
+        together, with a message that names the offender.
         """
-        families: Dict[str, List[str]] = {}
-        for p in self.points:
-            fam = families.setdefault(get_arch(p.arch).stack_key, [])
-            if p.arch not in fam:
-                fam.append(p.arch)
-        for key, archs in families.items():
-            if len(archs) < 2:
-                continue
-            members = set(archs)
+        noc_group_of = self._noc_group_of()
+        group_of = _stack_groups(
+            dict.fromkeys(p.arch for p in self.points),
+            lambda a: get_arch(a).stack_key, _canonical_group)
+        for group in {g for g in group_of.values() if len(g) > 1}:
+            key = get_arch(group[0]).stack_key
+            members = set(group)
+            # one representative NoC member per stacked group: whether
+            # two archs share a round dataflow cannot depend on which
+            # member is selected (the NoC state contribution is
+            # group-sized either way), and the NoC-family loop below
+            # validates NoC divergence itself — so don't multiply the
+            # eval_shape tracings by the NoC axis.
             combos = {(geom_structure(p.geom), p.trace.addr.shape[1:],
-                       np.shape(p.trace.insn_per_req), p.trace.n_apps)
+                       np.shape(p.trace.insn_per_req), p.trace.n_apps,
+                       noc_group_of[p.noc], noc_group_of[p.noc][0])
                       for p in self.points if p.arch in members}
-            group = _canonical_group(archs)
-            for structure, round_shape, insn_shape, n_apps in combos:
-                ref = _signature(group, archs[0], structure, round_shape,
-                                 insn_shape, n_apps)
-                for arch in archs[1:]:
+            for structure, round_shape, insn_shape, n_apps, ngroup, noc \
+                    in combos:
+                ref = _signature(group, group[0], structure, round_shape,
+                                 insn_shape, n_apps, ngroup, noc)
+                for arch in group[1:]:
                     if _signature(group, arch, structure, round_shape,
-                                  insn_shape, n_apps) != ref:
+                                  insn_shape, n_apps, ngroup, noc) != ref:
                         raise ValueError(
                             f"stack_key {key!r}: architecture {arch!r} "
-                            f"does not share {archs[0]!r}'s round "
+                            f"does not share {group[0]!r}'s round "
                             "dataflow (state pytrees differ), so they "
                             "cannot stack into one executable; give "
                             f"{arch!r} its own stack_key")
+        # NoC families: one fixed architecture per combo, members of the
+        # stacked model group must carry identical state pytrees. The
+        # groups are exactly the ones run() buckets by, so validation
+        # and execution can never disagree on family membership.
+        for ngroup in {g for g in noc_group_of.values() if len(g) > 1}:
+            key = get_noc(ngroup[0]).stack_key
+            members = set(ngroup)
+            combos = {(geom_structure(p.geom), p.trace.addr.shape[1:],
+                       np.shape(p.trace.insn_per_req), p.trace.n_apps,
+                       p.arch)
+                      for p in self.points if p.noc in members}
+            for structure, round_shape, insn_shape, n_apps, arch in combos:
+                agroup = (arch,)
+                ref = _signature(agroup, arch, structure, round_shape,
+                                 insn_shape, n_apps, ngroup, ngroup[0])
+                for noc in ngroup[1:]:
+                    if _signature(agroup, arch, structure, round_shape,
+                                  insn_shape, n_apps, ngroup, noc) != ref:
+                        raise ValueError(
+                            f"NoC stack_key {key!r}: model {noc!r} does "
+                            f"not share {ngroup[0]!r}'s round dataflow "
+                            "(carried NoC state pytrees differ), so "
+                            "they cannot stack into one executable; "
+                            f"give {noc!r} its own stack_key")
 
     def run(self, n_devices: Optional[int] = None) -> SweepRun:
         """Sweep every grid point; one sharded dispatch per bucket."""
@@ -231,21 +309,15 @@ class SweepGrid:
         avail = len(jax.devices())
         D = max(1, min(n_devices or avail, avail))
 
-        # Dataflow groups, ordered by first appearance of each arch.
-        group_of: Dict[str, Tuple[str, ...]] = {}
-        by_key: Dict[str, List[str]] = {}
-        for p in self.points:
-            if p.arch not in group_of:
-                by_key.setdefault(get_arch(p.arch).stack_key,
-                                  []).append(p.arch)
-                group_of[p.arch] = ()   # placeholder
-        for archs in by_key.values():
-            group = _canonical_group(archs)
-            for a in archs:
-                group_of[a] = group
+        # Dataflow groups, ordered by first appearance of each arch;
+        # NoC stacking groups the same way.
+        group_of = _stack_groups(
+            dict.fromkeys(p.arch for p in self.points),
+            lambda a: get_arch(a).stack_key, _canonical_group)
+        noc_group_of = self._noc_group_of()
 
         # One geometry split per *unique* geometry, not per point: each
-        # split commits 14 scalars to device.
+        # split commits the GeomScalars leaves to device.
         splits: Dict[GpuGeometry, tuple] = {}
 
         def split(geom):
@@ -253,19 +325,21 @@ class SweepGrid:
                 splits[geom] = split_geometry(geom)
             return splits[geom]
 
-        # Execution buckets: (group, structure, trace kind) — kind =
-        # (addr shape, insn shape, n_apps), so multi-app mixes bucket
-        # apart from solo traces but together with each other (no
-        # per-mix recompilation).
+        # Execution buckets: (group, NoC group, structure, trace kind)
+        # — kind = (addr shape, insn shape, n_apps), so multi-app mixes
+        # bucket apart from solo traces but together with each other
+        # (no per-mix recompilation), and stacked NoC models ride the
+        # same executable as their family.
         buckets: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
-            key = (group_of[p.arch], split(p.geom)[0], trace_kind(p.trace))
+            key = (group_of[p.arch], noc_group_of[p.noc],
+                   split(p.geom)[0], trace_kind(p.trace))
             buckets.setdefault(key, []).append(i)
 
         results: List[Optional[SimResult]] = [None] * len(self.points)
         used_execs: set = set()
         new_compiles = 0
-        for (group, structure, kind), idxs in buckets.items():
+        for (group, noc_group, structure, kind), idxs in buckets.items():
             _, insn_shape, n_apps = kind
             B = len(idxs)
             pad = (-B) % D
@@ -289,14 +363,17 @@ class SweepGrid:
                 *[split(p.geom)[1] for p in pts])
             policy_idx = jnp.asarray(
                 [group.index(p.arch) for p in pts], jnp.int32)
-            exec_key = (group, structure, kind, B + pad, D)
+            noc_idx = jnp.asarray(
+                [noc_group.index(p.noc) for p in pts], jnp.int32)
+            exec_key = (group, noc_group, structure, kind, B + pad, D)
             used_execs.add(exec_key)
             if exec_key not in _COMPILED_KEYS:
                 _COMPILED_KEYS.add(exec_key)
                 new_compiles += 1
-            fn = _sharded_executable(group, structure, D, n_apps)
+            fn = _sharded_executable(group, noc_group, structure, D, n_apps)
             stats = jax.device_get(
-                fn((addr, is_write, insn, core_app, scalars, policy_idx)))
+                fn((addr, is_write, insn, core_app, scalars, policy_idx,
+                    noc_idx)))
             for b, i in enumerate(idxs):
                 results[i] = _summarize(
                     jax.tree.map(lambda a: a[b], stats),

@@ -10,11 +10,19 @@ composable package:
 Every public (and test-visible private) name re-exports below so old
 imports keep working unchanged; new code should import from
 ``repro.core.trace``. This shim will stay for at least one release
-cycle.
+cycle — importing it raises a :class:`DeprecationWarning` so callers
+migrate before it goes.
 """
-from repro.core.trace.apps import (APPS, HIGH_LOCALITY, LOW_LOCALITY,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.workloads is a deprecated shim; import from "
+    "repro.core.trace (apps/generators/mix) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.core.trace.apps import (APPS, HIGH_LOCALITY, LOW_LOCALITY,  # noqa: F401,E402
                                    AppParams)
-from repro.core.trace.generators import (_SHARED_BASE, _PRIVATE_BASE,  # noqa: F401
+from repro.core.trace.generators import (_SHARED_BASE, _PRIVATE_BASE,  # noqa: F401,E402
                                          _STREAM_BASE, _kernel_params,
                                          _require_int32, _stable_seed,
                                          app_kernels, kernel_params,

@@ -256,7 +256,7 @@ def test_tagarray_fifo_and_random_victims():
 # workload int32 guard
 # ---------------------------------------------------------------------------
 def test_trace_addresses_refuse_int32_overflow():
-    from repro.core.workloads import _require_int32
+    from repro.core.trace.generators import _require_int32
     ok = np.asarray([[0, 2**26]], np.int64)
     assert _require_int32(ok).dtype == np.int32
     with pytest.raises(ValueError, match="outside int32"):

@@ -1,0 +1,365 @@
+"""NoC subsystem tests: registry, ideal bit-exactness (goldens + the
+committed sensitivity baseline), flit conservation for every registered
+model, topology behavior (crossbar backpressure, ring hop latency),
+sweep-grid stacking/executable accounting, and the report's ``noc``
+section + regression gate."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (APPS, PAPER_GEOMETRY, PAPER_NOCS, SweepGrid,
+                        SweepPoint, get_noc, make_trace, register_noc,
+                        registered_nocs, simulate)
+from repro.core import report as sensitivity
+from repro.core.noc import NocModel, NocTraffic, init_noc_state
+from repro.core.noc.base import port_rate
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINE = os.path.join(ROOT, "benchmarks", "baselines",
+                        "sensitivity_rounds96.json")
+
+
+def _trace(app="cfd", rounds=96, kernel=1):
+    return make_trace(dataclasses.replace(APPS[app], rounds=rounds),
+                      kernel=kernel)
+
+
+def same_result(a, b):
+    return all(x == y or (x != x and y != y)
+               for x, y in zip(tuple(a), tuple(b)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contains_builtin_models_in_order():
+    assert registered_nocs() == PAPER_NOCS == ("ideal", "crossbar", "ring")
+    # the built-ins share one stacking family by construction
+    assert {get_noc(n).stack_key for n in PAPER_NOCS} == {"noc"}
+
+
+def test_register_noc_rejects_duplicates_and_non_models():
+    from repro.core.noc import IdealNoc
+    with pytest.raises(ValueError, match="already registered"):
+        register_noc(IdealNoc())
+    with pytest.raises(TypeError):
+        register_noc("ideal")  # type: ignore[arg-type]
+    with pytest.raises(ValueError, match="unknown NoC model"):
+        get_noc("no_such_noc")
+    with pytest.raises(ValueError, match="noc must be one of"):
+        simulate("ata", _trace(rounds=8), noc="no_such_noc")
+
+
+# ---------------------------------------------------------------------------
+# ideal == the pre-NoC simulator, bit for bit
+# ---------------------------------------------------------------------------
+def test_ideal_is_the_default_and_reports_zero_noc_block():
+    tr = _trace()
+    base = simulate("ata", tr)
+    explicit = simulate("ata", tr, noc="ideal")
+    assert same_result(base, explicit)
+    nb = base.noc
+    assert nb.flits_injected == nb.flits_delivered > 0
+    assert nb.flits_queued == 0.0 and nb.conserved
+    assert nb.mean_queue_delay == nb.max_link_util == 0.0
+
+
+def test_ideal_bit_exact_inside_stacked_noc_grid():
+    """ideal points of a {ideal, crossbar, ring} grid — where the
+    carried NoC state is sized for the whole model group — must match
+    the solo (zero-sized state) simulate() exactly."""
+    traces = [_trace(rounds=96)]
+    grid = SweepGrid(("private", "remote", "ata"), None, traces,
+                     nocs=PAPER_NOCS)
+    run = grid.run()
+    for pt, r in zip(grid.points, run.results):
+        if pt.noc == "ideal":
+            assert same_result(r, simulate(pt.arch, pt.trace, pt.geom)), \
+                pt.arch
+
+
+def test_ideal_bit_exact_with_committed_sensitivity_baseline():
+    """Golden: the pre-NoC simulator's committed baseline cells are
+    reproduced exactly with the NoC stage in place (noc='ideal' is the
+    default everywhere the report runs)."""
+    with open(BASELINE) as f:
+        base = json.load(f)
+    cfg = base["config"]
+    knobs = {"noc_bw": tuple(cfg["knobs"]["noc_bw"])}
+    rep = sensitivity.run_sensitivity(
+        app=cfg["app"], archs=tuple(cfg["archs"]), knobs=knobs,
+        kernels_per_app=cfg["kernels_per_app"], rounds=cfg["rounds"])
+    want = {(c["arch"], c["knob"], c["value"]): c for c in base["cells"]}
+    got = {(c["arch"], c["knob"], c["value"]): c for c in rep["cells"]}
+    assert set(got) <= set(want)
+    assert len(got) == len(cfg["archs"]) * len(knobs["noc_bw"])
+    for key, cell in got.items():
+        for metric in sensitivity.CELL_METRICS:
+            np.testing.assert_allclose(
+                cell[metric], want[key][metric], rtol=1e-6,
+                err_msg=f"{key}/{metric}")
+
+
+# ---------------------------------------------------------------------------
+# flit conservation: injected == delivered + queued, per round + at end
+# ---------------------------------------------------------------------------
+def _random_traffic(rng, geom, R=64):
+    core = rng.integers(0, geom.n_cores, R).astype(np.int32)
+    cluster = core // geom.cluster_size
+    peer = (cluster * geom.cluster_size
+            + rng.integers(0, geom.cluster_size, R)).astype(np.int32)
+    flits = (rng.integers(0, 3, R) * geom.flits_per_line).astype(np.float32)
+    return NocTraffic(src=jnp.asarray(peer), dst=jnp.asarray(core),
+                      cluster=jnp.asarray(cluster),
+                      flits=jnp.asarray(flits),
+                      mask=jnp.asarray(flits > 0))
+
+
+@pytest.mark.parametrize("name", ("ideal", "crossbar", "ring"))
+def test_flit_conservation_per_round(name):
+    """Direct transit loop: the invariant holds after *every* round,
+    including while a crossbar queue is draining a backlog."""
+    model = get_noc(name)
+    # tiny bandwidth so the crossbar actually queues across rounds
+    geom = dataclasses.replace(PAPER_GEOMETRY, noc_bw=2.0, noc_drain=4.0)
+    state = init_noc_state(model.n_links(geom))
+    rng = np.random.default_rng(0)
+    queued_seen = 0.0
+    for t in range(24):
+        traffic = _random_traffic(rng, geom) if t < 16 else \
+            _random_traffic(rng, geom)._replace(
+                flits=jnp.zeros(64, jnp.float32),
+                mask=jnp.zeros(64, bool))       # drain-only rounds
+        out = model.transit(geom, state, traffic)
+        state = out.state
+        injected = float(state["injected"])
+        delivered = float(state["delivered"])
+        queued = float(np.asarray(state["queue"]).sum())
+        # exact up to f32 accumulation at non-representable drain rates
+        assert injected == pytest.approx(delivered + queued,
+                                         rel=1e-5, abs=1e-3), t
+        assert (np.asarray(out.delay) >= 0).all()
+        assert (np.asarray(out.occupancy) >= 0).all()
+        queued_seen = max(queued_seen, queued)
+    if name == "crossbar":
+        assert queued_seen > 0.0      # backpressure actually engaged
+
+
+@pytest.mark.parametrize("name", ("ideal", "crossbar", "ring"))
+@pytest.mark.parametrize("arch", ("remote", "ata"))
+def test_flit_conservation_end_of_sim(name, arch):
+    geom = dataclasses.replace(PAPER_GEOMETRY, noc_bw=4.0)
+    r = simulate(arch, _trace(rounds=96), geom, noc=name)
+    nb = r.noc
+    assert nb.flits_injected > 0
+    assert nb.conserved
+    assert nb.flits_injected == pytest.approx(
+        nb.flits_delivered + nb.flits_queued, rel=1e-5, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# topology behavior
+# ---------------------------------------------------------------------------
+def test_crossbar_backpressure_monotone_in_noc_bw():
+    tr = _trace()
+    ipcs = [simulate("ata", tr,
+                     dataclasses.replace(PAPER_GEOMETRY, noc_bw=bw),
+                     noc="crossbar").ipc
+            for bw in (2.0, 4.0, 16.0)]
+    assert ipcs[0] < ipcs[1] <= ipcs[2]
+    assert ipcs[2] <= simulate("ata", tr).ipc    # ideal is an upper bound
+
+
+def test_crossbar_queue_carries_across_rounds():
+    geom = dataclasses.replace(PAPER_GEOMETRY, noc_bw=2.0, noc_drain=4.0)
+    r = simulate("remote", _trace(rounds=96), geom, noc="crossbar")
+    # the probe-broadcast baseline overwhelms a 0.2 flit/cycle port:
+    # a standing backlog must be visible at end-of-sim
+    assert r.noc.flits_queued > 0
+    assert r.noc.mean_queue_delay > 0
+
+
+def test_ring_hop_latency_and_hotspots():
+    tr = _trace()
+    ideal = simulate("ata", tr)
+    ring = simulate("ata", tr, noc="ring")
+    assert ring.ipc <= ideal.ipc
+    assert ring.noc.mean_queue_delay > 0          # hop latency
+    assert ring.noc.max_link_util > 0             # per-link accounting
+    # hop latency scales with ring_hop
+    slow = simulate("ata", tr,
+                    dataclasses.replace(PAPER_GEOMETRY, ring_hop=16.0),
+                    noc="ring")
+    assert slow.noc.mean_queue_delay > ring.noc.mean_queue_delay
+    assert slow.ipc <= ring.ipc
+    # hit/traffic counters are timing-independent: only timing moved
+    assert ring.l1_hit_rate == ideal.l1_hit_rate
+    assert ring.noc_flits == ideal.noc_flits
+
+
+# ---------------------------------------------------------------------------
+# sweep grid: stacking, executable accounting, bit-exactness
+# ---------------------------------------------------------------------------
+def test_acceptance_grid_stacks_within_executable_budget():
+    """The ISSUE-5 acceptance grid: (4 archs x 3 nocs x scalar
+    geometries) compiles <= 4 executables (actually 2: one per arch
+    family — the NoC axis stacks), bit-identical to per-point
+    simulate(..., noc=...)."""
+    traces = [_trace(rounds=48)]
+    geoms = [PAPER_GEOMETRY,
+             dataclasses.replace(PAPER_GEOMETRY, noc_bw=4.0)]
+    grid = SweepGrid(("private", "ata", "ciao", "victim"), geoms, traces,
+                     nocs=PAPER_NOCS)
+    run = grid.run()
+    assert run.report.n_points == 4 * 2 * 3
+    assert run.report.n_executables <= 4
+    assert run.report.n_executables == 2
+    for pt, r in zip(grid.points, run.results):
+        assert same_result(
+            r, simulate(pt.arch, pt.trace, pt.geom, noc=pt.noc)), \
+            (pt.arch, pt.noc, pt.geom.noc_bw)
+
+
+def test_sweep_grid_rejects_unknown_noc():
+    with pytest.raises(ValueError, match="noc must be one of"):
+        SweepGrid(("ata",), None, [_trace(rounds=8)], nocs=("bogus",))
+
+
+def test_sweep_grid_rejects_noc_stack_dataflow_mismatch():
+    """A model that claims the shared family but carries extra state
+    must be rejected by name, not by an opaque lax.switch error."""
+    @dataclasses.dataclass(frozen=True)
+    class LeakyNoc(NocModel):
+        name: str = "test_leaky"
+
+        def transit(self, geom, state, traffic):
+            zeros = jnp.zeros_like(traffic.flits)
+            state = dict(state, extra=jnp.float32(0.0))  # illegal key
+            from repro.core.noc.base import NocTransit
+            return NocTransit(state=state, delay=zeros, occupancy=zeros)
+
+    register_noc(LeakyNoc(), overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="test_leaky"):
+            SweepGrid(("ata",), None, [_trace(rounds=8)],
+                      nocs=("ideal", "test_leaky"))
+    finally:
+        from repro.core.noc import _REGISTRY
+        _REGISTRY.pop("test_leaky", None)
+
+
+def test_new_noc_model_plugs_in_without_core_edits():
+    """Registry extension: a degenerate zero-delay model that keeps the
+    uniform state is immediately simulatable and stackable."""
+    from repro.core.noc.base import NocTransit
+
+    @dataclasses.dataclass(frozen=True)
+    class FlatNoc(NocModel):
+        name: str = "test_flat"
+
+        def transit(self, geom, state, traffic):
+            zeros = jnp.zeros_like(traffic.flits)
+            total = jnp.sum(jnp.where(traffic.mask, traffic.flits, 0.0))
+            state = self._count(state, traffic, zeros,
+                                injected=total, delivered=total)
+            return NocTransit(state=state, delay=zeros, occupancy=zeros)
+
+    register_noc(FlatNoc(), overwrite=True)
+    try:
+        tr = _trace(rounds=48)
+        flat = simulate("ata", tr, noc="test_flat")
+        assert same_result(flat, simulate("ata", tr))  # zero-delay == ideal
+        grid = SweepGrid(("ata",), None, [tr], nocs=("ideal", "test_flat"))
+        run = grid.run()
+        assert run.report.n_executables == 1      # stacks with the family
+        assert same_result(run.results[0], run.results[1])
+    finally:
+        from repro.core.noc import _REGISTRY
+        _REGISTRY.pop("test_flat", None)
+
+
+# ---------------------------------------------------------------------------
+# report: noc section + gate; fig_noc_topology
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def noc_report():
+    return sensitivity.run_sensitivity(
+        app="cfd", archs=("private", "ata"), knobs={"hide": (5.0, 10.0)},
+        kernels_per_app=1, rounds=64,
+        mix_pairings=(("cfd", "HS3D"),), noc_models=PAPER_NOCS)
+
+
+def test_schema_tag_is_contiguous_coverage():
+    """A noc-only report cannot claim schema 3 while dropping mix
+    coverage: the tag is the highest *contiguous* section level."""
+    rep = sensitivity.run_sensitivity(
+        app="cfd", archs=("ata",), knobs={"hide": (10.0,)},
+        kernels_per_app=1, rounds=48,
+        noc_models=("ideal",))             # noc without mix
+    assert rep["schema"] == 1 and "noc" in rep and "mix" not in rep
+
+
+def test_report_noc_section_structure_and_markdown(noc_report, tmp_path):
+    rep = noc_report
+    assert rep["schema"] == sensitivity.SCHEMA_VERSION == 3
+    assert "mix" in rep                   # schema 3 = mix AND noc
+    noc = rep["noc"]
+    assert len(noc["cells"]) == 2 * 3 * len(sensitivity.NOC_BW_VALUES)
+    for cell in noc["cells"]:
+        assert cell["noc"] in PAPER_NOCS
+        assert cell["ipc"] > 0
+        if cell["noc"] == "ideal":
+            assert cell["noc_mean_queue_delay"] == 0.0
+    # one executable per arch family, not per topology
+    assert noc["sweep"]["n_executables"] == 2
+    md_path = sensitivity.write_report(str(tmp_path / "rep.json"), rep)
+    md = open(md_path).read()
+    assert "Interconnect topology sensitivity" in md
+    assert "| ata | crossbar |" in md
+    again = sensitivity.load_report(str(tmp_path / "rep.json"))
+    assert again == json.loads(json.dumps(rep))
+
+
+def test_gate_covers_noc_section(noc_report):
+    rep = noc_report
+    assert sensitivity.compare_reports(rep, rep) == []
+    # a schema-1/2 baseline tolerates the new section
+    old = json.loads(json.dumps(rep))
+    del old["noc"]
+    old["schema"] = 2 if "mix" in old else 1
+    assert sensitivity.compare_reports(old, rep) == []
+    # drift inside the noc section is gated when both reports carry it
+    drifted = json.loads(json.dumps(rep))
+    drifted["noc"]["cells"][0]["ipc"] *= 1.5
+    fails = sensitivity.compare_reports(rep, drifted)
+    assert len(fails) == 1 and "noc" in fails[0] and "IPC drift" in fails[0]
+    missing = json.loads(json.dumps(rep))
+    del missing["noc"]
+    assert any("noc section missing" in f
+               for f in sensitivity.compare_reports(rep, missing))
+
+
+def test_fig_noc_topology_gap_changes_monotonically(capsys):
+    """ISSUE-5 acceptance: crossbar/ring close the ata-vs-private IPC
+    gap monotonically as noc_bw shrinks; ideal is flat by
+    construction."""
+    from benchmarks import fig_noc_topology
+    bws = (4.0, 8.0, 16.0, 32.0)
+    out = fig_noc_topology.run(kernels_per_app=1, rounds=96,
+                               archs=("private", "ata"), noc_bw=bws)
+    ideal = [out[("ideal", v, "ata_vs_private")] for v in bws]
+    assert max(ideal) - min(ideal) < 1e-6
+    for noc in ("crossbar", "ring"):
+        gaps = [out[(noc, v, "ata_vs_private")] for v in bws]
+        assert all(a <= b + 1e-9 for a, b in zip(gaps, gaps[1:])), \
+            (noc, gaps)
+        assert gaps[0] < gaps[-1]     # the topology actually bites
+        assert gaps[-1] <= ideal[-1] + 1e-6
+    printed = capsys.readouterr().out
+    assert "fig_noc.cfd.crossbar.noc_bw=4.ata_vs_private" in printed
+    assert "fig_noc.executables" in printed

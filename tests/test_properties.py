@@ -19,7 +19,8 @@ from repro.core.arch.ata import AtaPolicy
 from repro.core.arch.ciao import CiaoPolicy
 from repro.core.arch.private import PrivatePolicy
 from repro.core.arch.victim import VictimPolicy
-from repro.core.contention import group_rank
+from repro.core.contention import (_group_rank_onehot, group_prefix_sum,
+                                   group_rank)
 from repro.core.geometry import GpuGeometry
 from repro.core.simulator import _request_batch
 from repro.optim.compression import compress, decompress
@@ -48,6 +49,45 @@ def test_group_rank_matches_python(keys, data):
     for i, (key, on) in enumerate(zip(keys, mask)):
         if on:
             assert int(size[i]) == seen[key]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 200), st.data())
+def test_group_rank_sorted_path_matches_onehot_reference(n_keys, R, data):
+    """The hot sort/segment-sum path must return the *identical*
+    integers as the O(R*K) one-hot reference — downstream float timing
+    (and thus every golden) is bit-exact iff the ranks are."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    keys = jnp.asarray(rng.integers(0, n_keys, R), jnp.int32)
+    mask = jnp.asarray(rng.random(R) < data.draw(st.floats(0.0, 1.0)))
+    rank_s, size_s = group_rank(keys, mask, n_keys)
+    rank_r, size_r = _group_rank_onehot(keys, mask, n_keys)
+    assert (np.asarray(rank_s) == np.asarray(rank_r)).all()
+    assert (np.asarray(size_s) == np.asarray(size_r)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 80), st.data())
+def test_group_prefix_sum_matches_python(n_keys, R, data):
+    """The weighted generalization (NoC port arbitration) against a
+    sequential python accumulator."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    keys = rng.integers(0, n_keys, R)
+    vals = rng.integers(0, 9, R).astype(np.float32)
+    mask = rng.random(R) < 0.7
+    before, total = group_prefix_sum(
+        jnp.asarray(keys, jnp.int32), jnp.asarray(vals),
+        jnp.asarray(mask), n_keys)
+    acc = {}
+    for i in range(R):
+        if mask[i]:
+            assert float(before[i]) == acc.get(keys[i], 0.0), i
+            acc[keys[i]] = acc.get(keys[i], 0.0) + float(vals[i])
+        else:
+            assert float(before[i]) == 0.0 and float(total[i]) == 0.0
+    for i in range(R):
+        if mask[i]:
+            assert float(total[i]) == acc[keys[i]]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,105 @@
+"""scripts/bench_trend.py: cross-run drift tracking over a directory of
+nightly sensitivity reports (the `bench-history` CI artifact)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SCRIPT = os.path.join(ROOT, "scripts", "bench_trend.py")
+
+sys.path.insert(0, os.path.join(ROOT, "scripts"))
+import bench_trend  # noqa: E402
+
+
+def _report(ipc, ws=2.0, noc_ipc=10.0):
+    return {
+        "schema": 3,
+        "config": {}, "sweep": {"n_executables": 2},
+        "cells": [{"arch": "ata", "knob": "noc_bw", "value": 16.0,
+                   "ipc": ipc, "l1_hit_rate": 0.5}],
+        "mix": {"cells": [{"mix": "cfd+HS3D", "arch": "ata",
+                           "weighted_speedup": ws}]},
+        "noc": {"cells": [{"arch": "ata", "noc": "crossbar",
+                           "noc_bw": 8.0, "ipc": noc_ipc}]},
+    }
+
+
+@pytest.fixture()
+def history(tmp_path):
+    d = tmp_path / "bench_history"
+    d.mkdir()
+    for name, rep in [
+            ("2026-07-27.json", _report(20.0)),
+            ("2026-07-28.json", _report(20.2)),
+            ("2026-07-29.json", _report(21.0, ws=2.5, noc_ipc=10.1)),
+    ]:
+        (d / name).write_text(json.dumps(rep))
+    (d / "junk.json").write_text("{not json")          # tolerated
+    (d / "notes.txt").write_text("ignored")
+    return str(d)
+
+
+def test_series_cover_solo_mix_and_noc_sections(history):
+    reports = bench_trend.load_history(history)
+    assert [name for name, _ in reports] \
+        == ["2026-07-27", "2026-07-28", "2026-07-29"]
+    series = bench_trend._cell_series(reports)
+    assert ("solo", "ata", "noc_bw", 16.0, "ipc") in series
+    assert ("mix", "cfd+HS3D", "ata", "weighted_speedup") in series
+    assert ("noc", "ata", "crossbar", 8.0, "ipc") in series
+    assert [v for _, v in
+            series[("solo", "ata", "noc_bw", 16.0, "ipc")]] \
+        == [20.0, 20.2, 21.0]
+
+
+def test_trend_rows_flag_drift_beyond_rtol(history):
+    reports = bench_trend.load_history(history)
+    rows = bench_trend.trend_rows(bench_trend._cell_series(reports),
+                                  rtol=0.05)
+    by_key = {r["key"]: r for r in rows}
+    # solo IPC: latest 21.0 vs median(20.0, 20.2) = 20.1 -> +4.5%, ok
+    solo = by_key[("solo", "ata", "noc_bw", 16.0, "ipc")]
+    assert not solo["flagged"]
+    assert solo["drift"] == pytest.approx((21.0 - 20.1) / 20.1)
+    # mix WS: 2.5 vs median 2.0 -> +25%, flagged
+    assert by_key[("mix", "cfd+HS3D", "ata", "weighted_speedup")
+                  ]["flagged"]
+    md = bench_trend.to_markdown(rows, 0.05, len(reports))
+    assert "1 cell(s) drifted beyond tolerance" in md
+    assert "cfd+HS3D/ata" in md
+    csv = bench_trend.to_csv(bench_trend._cell_series(reports))
+    assert "solo,ata/noc_bw/16.0,ipc,2026-07-29,21.0" in csv
+
+
+def test_cli_writes_outputs_and_strict_gates(history, tmp_path):
+    md = str(tmp_path / "trend.md")
+    csv = str(tmp_path / "trend.csv")
+    r = subprocess.run(
+        [sys.executable, SCRIPT, history, "--markdown", md,
+         "--csv", csv, "--rtol", "0.05"],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr          # informational default
+    assert "1 flagged" in r.stderr
+    assert os.path.exists(md) and os.path.exists(csv)
+    # --strict turns flagged drift into a failing exit code
+    r = subprocess.run(
+        [sys.executable, SCRIPT, history, "--rtol", "0.05", "--strict"],
+        capture_output=True, text=True)
+    assert r.returncode == 1
+    # single-report history: tables render, nothing flagged, exit 0
+    solo_dir = tmp_path / "one"
+    solo_dir.mkdir()
+    (solo_dir / "a.json").write_text(json.dumps(_report(20.0)))
+    r = subprocess.run(
+        [sys.executable, SCRIPT, str(solo_dir), "--strict"],
+        capture_output=True, text=True)
+    assert r.returncode == 0 and "0 flagged" in r.stderr
+    # empty history is an error
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    r = subprocess.run([sys.executable, SCRIPT, str(empty)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
