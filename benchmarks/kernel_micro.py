@@ -20,14 +20,42 @@ def run():
     valid = jnp.asarray(RNG.random((C, S, W)) < 0.7)
     qtag = jnp.asarray(RNG.integers(0, 4096, R), jnp.int32)
     set_idx = jnp.asarray(RNG.integers(0, S, R), jnp.int32)
-    us_ref, (h2, _) = time_call(ops.ata_probe, set_idx, qtag, tags, valid,
-                                impl="ref")
-    us_int, (h1, _) = time_call(ops.ata_probe, set_idx, qtag, tags, valid,
-                                impl="interpret")
+    us_ref, (h2, w2) = time_call(ops.ata_probe, set_idx, qtag, tags,
+                                 valid, impl="ref")
+    us_int, (h1, w1) = time_call(ops.ata_probe, set_idx, qtag, tags,
+                                 valid, impl="interpret")
+    # exact integer kernel: err folds hits and (hit-masked) ways — the
+    # way is only defined where the probe hit
+    err = max(int(jnp.abs(h1.astype(jnp.int32)
+                          - h2.astype(jnp.int32)).max()),
+              int(jnp.abs(jnp.where(h2, w1, 0)
+                          - jnp.where(h2, w2, 0)).max()))
     emit("kernel.ata_tag_probe.ref", us_ref,
          f"R={R};C={C};hits={int(h2.sum())}")
-    emit("kernel.ata_tag_probe.interpret", us_int,
-         f"mismatch={int((h1 != h2).sum())}")
+    emit("kernel.ata_tag_probe.interpret", us_int, f"maxerr={err}")
+
+    # ata_probe_rank (fused probe + winner pick + port arbitration)
+    G = 4
+    core = jnp.asarray(RNG.integers(0, C, R), jnp.int32)
+    cbase = (core // G) * G
+    deny = jnp.asarray(RNG.random(R) < 0.2)
+    dirty = jnp.asarray(valid & (RNG.random((C, S, W)) < 0.2))
+    us_ref, ref_out = time_call(ops.ata_probe_rank, set_idx, qtag, core,
+                                cbase, deny, tags, valid, dirty,
+                                cluster_size=G, impl="ref")
+    us_int, int_out = time_call(ops.ata_probe_rank, set_idx, qtag, core,
+                                cbase, deny, tags, valid, dirty,
+                                cluster_size=G, impl="interpret")
+    lh, rok = ref_out[0], ref_out[2]
+    masks = (None, lh, None, rok, rok, rok)   # way/src/rank/size scopes
+    err = 0
+    for a, b, m in zip(int_out, ref_out, masks):
+        d = jnp.abs(a.astype(jnp.int32) - b.astype(jnp.int32))
+        err = max(err, int(jnp.where(m, d, 0).max() if m is not None
+                           else d.max()))
+    emit("kernel.ata_probe_rank.ref", us_ref,
+         f"R={R};C={C};G={G};remote={int(rok.sum())}")
+    emit("kernel.ata_probe_rank.interpret", us_int, f"maxerr={err}")
 
     # flash attention
     q = jnp.asarray(RNG.standard_normal((2, 8, 512, 64)), jnp.float32)

@@ -1,0 +1,148 @@
+"""Simulator throughput per probe backend: rounds/sec over the
+geometry-sweep grid.
+
+The fused probe+rank+arbitrate path (``repro.core.probe``, backend
+``lax``) exists to make the simulator *faster* without changing a
+single output bit; this benchmark is the measurement that claim rides
+on. It times a full :class:`repro.core.sweep.SweepGrid` run — the
+unique geometries of ``fig_sweep_geometry``'s six knobs (13 shapes,
+structural recompiles included in warmup, excluded from timing) x the
+``ata`` policy x one ``cfd`` kernel — once per probe backend, and
+reports rounds simulated per wall-clock second (best of ``reps``
+timed runs after a warmup run).
+
+``lax`` vs ``lax_unfused`` is the headline: the same sweep with and
+without the fused restructuring, so ``fused_speedup`` isolates the
+optimization on identical hardware. ``pallas_interpret`` (off by
+default, ``--interpret``) is a correctness artifact, not a speed
+path — the interpreter is orders of magnitude slower and is timed at
+one small point only.
+
+The report (``--json``) is schema-versioned and gated in CI against
+``benchmarks/baselines/simspeed_rounds64.json`` by
+``scripts/check_bench_regression.py`` (which dispatches on
+``kind == "simspeed"`` to ``repro.core.report.compare_simspeed``):
+the *ratio* is gated — absolute rounds/sec varies with the host, the
+fused-vs-unfused speedup on one host does not. The nightly job
+appends the report to ``bench_history/`` so ``scripts/bench_trend.py``
+tracks absolute throughput drift across (comparable) runners too.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core import PAPER_GEOMETRY
+from repro.core.metrics import app_traces
+from repro.core.sweep import SweepGrid, SweepPoint
+from benchmarks.common import emit
+
+APP = "cfd"
+KERNEL = 0
+ARCH = "ata"
+SCHEMA = 1
+#: headline = fused lax vs the historical unfused chain
+DEFAULT_BACKENDS = ("lax", "lax_unfused")
+
+
+def unique_geometries():
+    """The deduplicated geometry set of the six fig_sweep knobs."""
+    from benchmarks.fig_sweep_geometry import KNOBS
+    geoms = []
+    for knob, values in KNOBS.items():
+        for v in values:
+            g = dataclasses.replace(PAPER_GEOMETRY, **{knob: v})
+            if g not in geoms:
+                geoms.append(g)
+    return geoms
+
+
+def _grid(geoms, traces, backend):
+    return SweepGrid.from_points(
+        [SweepPoint(ARCH, g, traces[g.n_cores], "ideal", backend)
+         for g in geoms])
+
+
+def _time_backend(geoms, traces, backend, rounds, reps):
+    grid = _grid(geoms, traces, backend)
+    warm = grid.run()                       # compiles included here
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        grid.run()
+        best = min(best, time.perf_counter() - t0)
+    sim_rounds = len(geoms) * rounds
+    return {
+        "backend": backend,
+        "n_points": len(geoms),
+        "rounds": rounds,
+        "wall_s": best,
+        "rounds_per_sec": sim_rounds / best,
+        "n_executables": warm.report.n_executables,
+    }
+
+
+def run(rounds=64, reps=3, backends=DEFAULT_BACKENDS, interpret=False,
+        out_json=None, geoms=None):
+    geoms = list(geoms) if geoms is not None else unique_geometries()
+    traces = {}
+    for g in geoms:
+        if g.n_cores not in traces:
+            traces[g.n_cores] = app_traces(APP, g, [KERNEL],
+                                           rounds=rounds)[0]
+    cells = []
+    for backend in backends:
+        cell = _time_backend(geoms, traces, backend, rounds, reps)
+        cells.append(cell)
+        emit(f"sim_speed.{backend}", cell["wall_s"] * 1e6,
+             f"{cell['rounds_per_sec']:.0f} rounds/s")
+    if interpret:
+        # one small point: the interpreter validates semantics, its
+        # wall time is not a useful speed signal beyond "still runs"
+        cell = _time_backend(geoms[:1], traces, "pallas_interpret",
+                             rounds, 1)
+        cells.append(cell)
+        emit("sim_speed.pallas_interpret", cell["wall_s"] * 1e6,
+             f"{cell['rounds_per_sec']:.0f} rounds/s")
+
+    rps = {c["backend"]: c["rounds_per_sec"] for c in cells}
+    headline = {}
+    if "lax" in rps and "lax_unfused" in rps:
+        headline["fused_speedup"] = rps["lax"] / rps["lax_unfused"]
+        emit("sim_speed.fused_speedup", 0.0,
+             f"{headline['fused_speedup']:.3f}x")
+    report = {
+        "kind": "simspeed",
+        "schema": SCHEMA,
+        "config": {"app": APP, "kernel": KERNEL, "arch": ARCH,
+                   "rounds": rounds, "n_geoms": len(geoms)},
+        "sweep": {"n_executables": sum(c["n_executables"]
+                                       for c in cells)},
+        "cells": cells,
+        "headline": headline,
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=64,
+                    help="trace rounds per point (default 64)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions, best taken (default 3)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="also time pallas_interpret at one point")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the simspeed report JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(rounds=args.rounds, reps=args.reps, interpret=args.interpret,
+        out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

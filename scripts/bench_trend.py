@@ -24,7 +24,10 @@ redden the calendar.
         [--markdown TREND.md] [--csv trend.csv] [--rtol 0.05] [--strict]
 
 Reports are ordered by filename (ISO dates sort correctly); at least
-two are needed for drift, one still produces the tables.
+two are needed for drift, one still produces the tables. Simulator
+throughput reports (``benchmarks.sim_speed``, ``"kind": "simspeed"``)
+ride the same history directory: their per-backend rounds/sec and the
+fused-speedup ratio become ``simspeed`` series rows.
 """
 import argparse
 import json
@@ -44,6 +47,18 @@ def _cell_series(reports: List[Tuple[str, dict]]
             .append((run, float(value)))
 
     for run, rep in reports:
+        if rep.get("kind") == "simspeed":
+            # throughput reports: per-backend rounds/sec (absolute —
+            # informative across comparable runners) + the
+            # machine-portable fused speedup ratio
+            for c in rep.get("cells", ()):
+                add(run, "simspeed", (c["backend"],), "rounds_per_sec",
+                    c["rounds_per_sec"])
+            ratio = rep.get("headline", {}).get("fused_speedup")
+            if ratio is not None:
+                add(run, "simspeed", ("lax/lax_unfused",),
+                    "fused_speedup", ratio)
+            continue
         for c in rep.get("cells", ()):
             add(run, "solo", (c["arch"], c["knob"], c["value"]), "ipc",
                 c["ipc"])

@@ -17,16 +17,31 @@ and the gate is forward-compatible: a candidate at a *newer* schema
 sections the older baseline carries instead of failing on unknown
 keys; a candidate at an older schema than the baseline fails.
 
+The same gate covers the simulator-throughput reports of
+``benchmarks.sim_speed`` (``"kind": "simspeed"``): when the baseline
+declares that kind, the comparison dispatches to
+``repro.core.report.compare_simspeed``, which gates the
+machine-portable fused-vs-unfused speedup *ratio* (``--speedup-rtol``,
+one-sided) rather than host-dependent absolute rounds/sec
+(``--rps-rtol`` opt-in for same-runner setups):
+
+    PYTHONPATH=src python scripts/check_bench_regression.py \
+        benchmarks/baselines/simspeed_rounds64.json \
+        BENCH_simspeed.json [--speedup-rtol 0.30]
+
 To update the baseline after an *intentional* performance or model
 change, regenerate it with the same configuration CI uses and commit:
 
     PYTHONPATH=src python -m benchmarks.run --rounds 96 \
         --report-json benchmarks/baselines/sensitivity_rounds96.json
+    PYTHONPATH=src python -m benchmarks.sim_speed --rounds 64 \
+        --json benchmarks/baselines/simspeed_rounds64.json
 """
 import argparse
 import sys
 
-from repro.core.report import compare_reports, load_report
+from repro.core.report import (compare_reports, compare_simspeed,
+                               load_report)
 
 
 def main() -> int:
@@ -37,10 +52,34 @@ def main() -> int:
     ap.add_argument("candidate", help="freshly produced report JSON")
     ap.add_argument("--ipc-rtol", type=float, default=0.10,
                     help="allowed per-cell IPC drift (default 10%%)")
+    ap.add_argument("--speedup-rtol", type=float, default=0.30,
+                    help="allowed one-sided fused-speedup-ratio drop "
+                    "for simspeed reports (default 30%%)")
+    ap.add_argument("--rps-rtol", type=float, default=None,
+                    help="gate absolute rounds/sec too (simspeed; "
+                    "off by default — host-dependent)")
     args = ap.parse_args()
 
     baseline = load_report(args.baseline)
     candidate = load_report(args.candidate)
+    if baseline.get("kind") == "simspeed":
+        failures = compare_simspeed(baseline, candidate,
+                                    speedup_rtol=args.speedup_rtol,
+                                    rps_rtol=args.rps_rtol)
+        if failures:
+            print(f"simspeed regression gate FAILED "
+                  f"({len(failures)} finding(s)):", file=sys.stderr)
+            for f in failures:
+                print(f"  - {f}", file=sys.stderr)
+            print("(intentional change? regenerate the baseline — see "
+                  "--help)", file=sys.stderr)
+            return 1
+        ratio = candidate.get("headline", {}).get("fused_speedup")
+        print(f"simspeed regression gate OK: "
+              f"{len(baseline['cells'])} backends present, fused "
+              f"speedup {ratio:.3f}x (floor "
+              f"{baseline['headline']['fused_speedup'] * (1 - args.speedup_rtol):.3f}x)")
+        return 0
     if candidate.get("schema") != baseline.get("schema"):
         print(f"note: forward-compatible compare — baseline schema "
               f"{baseline.get('schema')}, candidate schema "

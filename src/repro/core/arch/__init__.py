@@ -13,7 +13,7 @@ import; external code adds more with::
     @dataclasses.dataclass(frozen=True)
     class MyPolicy(ArchPolicy):
         name: str = "mine"
-        def l1_stage(self, geom, l1, reqs, t): ...
+        def l1_stage(self, geom, l1, reqs, t, *, backend="lax"): ...
 
     register_arch(MyPolicy())
 

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 from repro.core import tagarray
 from repro.core.arch.base import TAG_CHECK, ArchPolicy, L1Outcome, RequestBatch
-from repro.core.contention import group_rank
 from repro.core.geometry import GpuGeometry
+from repro.core.probe import fused_probe_rank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,37 +41,24 @@ class AtaPolicy(ArchPolicy):
         return None
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
         addr, set_idx = reqs.addr, reqs.set_idx
-        # aggregated tag array: all cluster tags compared in parallel,
-        # zero added latency, zero probe traffic.
-        hits, ways, dirt = tagarray.probe_many(l1, reqs.peers, set_idx, addr)
-        is_self = (jnp.arange(geom.cluster_size)[None, :]
-                   == reqs.self_slot[:, None])
-        local_hit = (hits & is_self).any(axis=-1)
-        way = jnp.where(local_hit,
-                        jnp.take_along_axis(
-                            ways, reqs.self_slot[:, None], axis=1)[:, 0],
-                        tagarray.probe(l1, reqs.core, set_idx, addr,
-                                       policy=self.replacement)[1])
         # victim prefilter: read misses served by a victim structure
         # (when the subclass provides one) skip the remote path.
         pre = self._victim_prefilter(l1, reqs)
+        # aggregated tag array: all cluster tags compared in parallel,
+        # zero added latency, zero probe traffic — plus winner pick and
+        # remote-port arbitration, fused under the selected backend
+        # (repro.core.probe; all backends are bit-exact).
+        pr = fused_probe_rank(geom, l1, reqs, pre_served=pre,
+                              replacement=self.replacement,
+                              backend=backend)
+        local_hit, way = pr.local_hit, pr.touch_way
+        remote_ok, src_cache = pr.remote_ok, pr.src_cache
+        prank, psize = pr.prank, pr.psize
         vserved = (None if pre is None
                    else pre & ~local_hit & ~reqs.is_write)
-        rmask = hits & ~is_self
-        any_remote = rmask.any(axis=-1)
-        src_slot = jnp.argmax(rmask, axis=-1)
-        src_cache = reqs.cluster * geom.cluster_size + src_slot
-        src_dirty = jnp.take_along_axis(dirt, src_slot[:, None],
-                                        axis=1)[:, 0]
-        # writes are local-only (paper coherence rule); dirty remote
-        # copies divert the read to L2.
-        remote_ok = ((~reqs.is_write) & (~local_hit) & any_remote
-                     & (~src_dirty))
-        if vserved is not None:
-            remote_ok = remote_ok & ~vserved
-        prank, psize = group_rank(src_cache, remote_ok, geom.n_cores)
         # only *actual* remote hits occupy the remote data port — the
         # filtering that is the paper's core contention win.
         occupancy = jnp.where(

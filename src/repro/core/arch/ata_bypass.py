@@ -32,8 +32,9 @@ class AtaBypassPolicy(AtaPolicy):
     name: str = "ata_bypass"
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
-        out = super().l1_stage(geom, l1, reqs, t)
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        out = super().l1_stage(geom, l1, reqs, t, backend=backend)
         dead = tagarray.dead_victim(out.l1, out.fill_cache, out.fill_set,
                                     reqs.addr, policy=self.replacement)
         # only L2-bound misses bypass; remote hits still replicate locally

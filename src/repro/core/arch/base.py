@@ -115,5 +115,15 @@ class ArchPolicy:
         return self.name
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t: jnp.ndarray) -> L1Outcome:
+                 reqs: RequestBatch, t: jnp.ndarray, *,
+                 backend: str = "lax") -> L1Outcome:
+        """Run the policy's L1 complex over one round's requests.
+
+        ``backend`` selects the probe lowering (``repro.core.probe``) —
+        a *static* simulator axis threaded down from
+        ``simulate(..., probe_backend=...)``. Only the ATA family has a
+        probe chain to lower; policies without one accept and ignore
+        the keyword (backend choice never changes any policy's results
+        — tier-1 tested).
+        """
         raise NotImplementedError

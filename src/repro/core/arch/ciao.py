@@ -53,8 +53,9 @@ class CiaoPolicy(PrivatePolicy):
         return "private"
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
-        out = super().l1_stage(geom, l1, reqs, t)
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        out = super().l1_stage(geom, l1, reqs, t, backend=backend)
         # Disabled (threshold <= 0) or run without the thrash extension:
         # degenerate to the private baseline bit-exactly.
         if self.thrash_threshold <= 0 or l1["thrash"].shape[0] == 0:

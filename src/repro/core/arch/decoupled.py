@@ -20,7 +20,9 @@ class DecoupledPolicy(ArchPolicy):
     name: str = "decoupled"
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        del backend   # no probe chain to lower (ATA-family axis)
         R = reqs.n_requests
         addr = reqs.addr
         home = (reqs.cluster * geom.cluster_size

@@ -15,7 +15,9 @@ class PrivatePolicy(ArchPolicy):
     name: str = "private"
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        del backend   # no probe chain to lower (ATA-family axis)
         R = reqs.n_requests
         hit, way, _ = tagarray.probe(l1, reqs.core, reqs.set_idx, reqs.addr,
                                      policy=self.replacement)

@@ -21,7 +21,9 @@ class RemotePolicy(ArchPolicy):
     name: str = "remote"
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        del backend   # no probe chain to lower (ATA-family axis)
         addr, set_idx = reqs.addr, reqs.set_idx
         hit, way, _ = tagarray.probe(l1, reqs.core, set_idx, addr,
                                      policy=self.replacement)

@@ -49,8 +49,9 @@ class VictimPolicy(AtaPolicy):
         return hit
 
     def l1_stage(self, geom: GpuGeometry, l1: tagarray.TagState,
-                 reqs: RequestBatch, t) -> L1Outcome:
-        out = super().l1_stage(geom, l1, reqs, t)
+                 reqs: RequestBatch, t, *,
+                 backend: str = "lax") -> L1Outcome:
+        out = super().l1_stage(geom, l1, reqs, t, backend=backend)
         if tagarray.victim_ways(out.l1) == 0:
             return out
         addr, set_idx = reqs.addr, reqs.set_idx

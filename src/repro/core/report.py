@@ -482,3 +482,71 @@ def compare_reports(baseline: dict, candidate: dict, *,
                              metric_label="IPC", rtol=ipc_rtol,
                              label="noc")
     return failures
+
+
+def compare_simspeed(baseline: dict, candidate: dict, *,
+                     speedup_rtol: float = 0.30,
+                     rps_rtol: Optional[float] = None) -> List[str]:
+    """Regression gate for ``benchmarks.sim_speed`` throughput reports
+    (``kind == "simspeed"``); returns human-readable failure strings.
+
+    The blocking check is the **fused speedup ratio** — rounds/sec of
+    the fused ``lax`` backend over the historical ``lax_unfused``
+    chain, measured back-to-back on one host, so it is
+    machine-portable: the gate fails when the candidate's ratio falls
+    below the baseline's by more than ``speedup_rtol`` (a one-sided
+    check — a *faster* fused path is never a regression). Absolute
+    rounds/sec is host-dependent and only gated when ``rps_rtol`` is
+    given (for same-runner comparisons); the nightly trend tracking
+    (``scripts/bench_trend.py``) watches it informationally either
+    way. Also fails on config mismatch, schema downgrade, backends
+    missing from the candidate, and per-backend executable-count
+    growth (a stacking regression would show up as compiles, not
+    seconds, at CI's round counts).
+    """
+    for rep, who in ((baseline, "baseline"), (candidate, "candidate")):
+        if rep.get("kind") != "simspeed":
+            return [f"{who} is not a simspeed report "
+                    f"(kind={rep.get('kind')!r})"]
+    if candidate.get("schema", 0) < baseline.get("schema", 0):
+        return [f"schema downgrade: baseline {baseline.get('schema')} "
+                f"vs candidate {candidate.get('schema')}"]
+    for key, value in baseline["config"].items():
+        if candidate["config"].get(key) != value:
+            return [f"config mismatch — reports are not comparable: "
+                    f"baseline {baseline['config']} "
+                    f"vs candidate {candidate['config']}"]
+
+    failures: List[str] = []
+    cand_cells = {c["backend"]: c for c in candidate["cells"]}
+    for base_cell in baseline["cells"]:
+        backend = base_cell["backend"]
+        cell = cand_cells.get(backend)
+        if cell is None:
+            failures.append(f"backend missing from candidate: {backend}")
+            continue
+        if cell["n_executables"] > base_cell["n_executables"]:
+            failures.append(
+                f"{backend} executable count grew: "
+                f"{base_cell['n_executables']} -> "
+                f"{cell['n_executables']}")
+        if rps_rtol is not None:
+            base_v, cand_v = (base_cell["rounds_per_sec"],
+                              cell["rounds_per_sec"])
+            if cand_v < base_v * (1 - rps_rtol):
+                failures.append(
+                    f"{backend} rounds/sec fell beyond -{rps_rtol:.0%}: "
+                    f"{base_v:.0f} -> {cand_v:.0f}")
+    base_ratio = baseline.get("headline", {}).get("fused_speedup")
+    cand_ratio = candidate.get("headline", {}).get("fused_speedup")
+    if base_ratio is not None:
+        if cand_ratio is None:
+            failures.append("fused_speedup headline missing from "
+                            "candidate")
+        elif cand_ratio < base_ratio * (1 - speedup_rtol):
+            failures.append(
+                f"fused speedup fell beyond -{speedup_rtol:.0%}: "
+                f"{base_ratio:.3f}x -> {cand_ratio:.3f}x "
+                "(the fused lax probe path lost its win over "
+                "lax_unfused)")
+    return failures

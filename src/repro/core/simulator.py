@@ -72,6 +72,8 @@ from repro.core.geometry import (GEOM_SCALAR_FIELDS, GeomScalars,
                                  TracedGeometry, split_geometry)
 from repro.core.noc import (NocModel, NocTraffic, get_noc, init_noc_state,
                             registered_nocs)
+from repro.core.probe import (PROBE_BACKENDS,
+                              check_probe_backend as _check_probe_backend)
 
 #: Backwards-compatible alias: the paper's comparison set. The full,
 #: extensible set is ``repro.core.arch.registered_archs()``.
@@ -339,7 +341,8 @@ def _request_batch(geom, addr, is_write) -> RequestBatch:
 
 
 def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
-           geom, insn_per_req, core_app, state, xs):
+           geom, insn_per_req, core_app, state, xs, *,
+           probe_backend: str = "lax"):
     """One simulation round. state=(l1, l2, noc, t, stats);
     xs=(addr, is_write).
 
@@ -350,7 +353,9 @@ def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
     scatter-adds (all zeros for solo traces). ``nocs`` is the stacked
     interconnect-model group compiled into this executable; the traced
     ``noc_idx`` selects the active one (``lax.switch`` when the group
-    has more than one member).
+    has more than one member). ``probe_backend`` selects the L1 probe
+    lowering (``repro.core.probe``) — *static*, since the backends
+    lower structurally different programs; every backend is bit-exact.
     """
     l1, l2, noc, t, stats = state
     addr, is_write = xs                      # (C, m)
@@ -360,7 +365,7 @@ def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
     R = reqs.n_requests
 
     # ---- L1 policy stage (the only architecture-specific part) ------------
-    out = policy.l1_stage(geom, l1, reqs, t)
+    out = policy.l1_stage(geom, l1, reqs, t, backend=probe_backend)
     l1 = out.l1
     go_l2 = out.go_l2
     noc_flits = jnp.asarray(out.noc_flits, jnp.float32)
@@ -474,7 +479,8 @@ def _init_stats(geom, n_apps: int = 1) -> Dict[str, jnp.ndarray]:
 
 
 def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
-              structure: GeomStructure, n_apps: int = 1):
+              structure: GeomStructure, n_apps: int = 1,
+              probe_backend: str = "lax"):
     """Scan one grid point through the round pipeline.
 
     ``archs`` is a *dataflow group*: one or more same-dataflow
@@ -484,10 +490,14 @@ def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
     traced ``noc_idx`` the same way (an inner switch over the NoC
     stage). ``point_arrays = (addr, is_write, insn_per_req, core_app,
     scalars, policy_idx, noc_idx)`` — everything but ``archs``/
-    ``nocs``/``structure``/``n_apps`` is traced, so one executable
-    serves whole (policy, NoC, timing-geometry, trace) grids;
-    ``n_apps`` sizes the per-app attribution accumulators (static —
-    mixes with the same app count share executables).
+    ``nocs``/``structure``/``n_apps``/``probe_backend`` is traced, so
+    one executable serves whole (policy, NoC, timing-geometry, trace)
+    grids; ``n_apps`` sizes the per-app attribution accumulators
+    (static — mixes with the same app count share executables).
+    ``probe_backend`` is static too: unlike NoC models, probe backends
+    lower structurally different round programs (XLA chain vs Pallas
+    kernel), so each gets its own executable rather than a traced
+    switch branch.
     """
     addr, is_write, insn_per_req, core_app, scalars, policy_idx, \
         noc_idx = point_arrays
@@ -498,7 +508,8 @@ def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
              _noc_state(geom, noc_models), jnp.int32(0),
              _init_stats(geom, n_apps))
     steps = [functools.partial(_round, p, noc_models, noc_idx, geom,
-                               insn_per_req, core_app)
+                               insn_per_req, core_app,
+                               probe_backend=probe_backend)
              for p in policies]
     if len(steps) == 1:
         step = steps[0]
@@ -511,16 +522,17 @@ def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
 
 
 #: One compilation per (arch group, NoC group, trace shape, geometry
-#: structure, app count).
-_simulate = jax.jit(_sim_core, static_argnums=(0, 1, 3, 4))
+#: structure, app count, probe backend).
+_simulate = jax.jit(_sim_core, static_argnums=(0, 1, 3, 4, 5))
 
 #: Batched form: vmap over a leading grid-point axis, still one
 #: compilation. ``repro.core.sweep`` adds device sharding on top.
 _simulate_batch = jax.jit(
-    lambda archs, nocs, point_arrays, structure, n_apps: jax.vmap(
-        lambda pa: _sim_core(archs, nocs, pa, structure,
-                             n_apps))(point_arrays),
-    static_argnums=(0, 1, 3, 4))
+    lambda archs, nocs, point_arrays, structure, n_apps, probe_backend: \
+    jax.vmap(
+        lambda pa: _sim_core(archs, nocs, pa, structure, n_apps,
+                             probe_backend))(point_arrays),
+    static_argnums=(0, 1, 3, 4, 5))
 
 
 def _trace_arrays(trace: Trace):
@@ -548,7 +560,8 @@ def round_signature(group: Tuple[str, ...], arch: str,
                     insn_shape: Tuple[int, ...] = (),
                     n_apps: int = 1,
                     noc_group: Tuple[str, ...] = ("ideal",),
-                    noc: str = "ideal"):
+                    noc: str = "ideal",
+                    probe_backend: str = "lax"):
     """Abstract shape/dtype pytree of one scanned round of ``arch``.
 
     The round is evaluated (``jax.eval_shape`` — no compilation, no
@@ -561,7 +574,10 @@ def round_signature(group: Tuple[str, ...], arch: str,
     that with this function before it buckets a grid.
     ``insn_shape``/``n_apps`` mirror the trace's instruction-intensity
     shape and app count: mixes carry per-app accumulators in the same
-    pytree.
+    pytree. ``probe_backend`` selects the probe lowering — every
+    backend must (and does) carry an identical state pytree, which this
+    signature also certifies (the Pallas path abstract-evaluates here
+    without running the kernel body).
     """
     C, m = round_shape
     policies = [get_arch(a) for a in group]
@@ -580,7 +596,8 @@ def round_signature(group: Tuple[str, ...], arch: str,
         # an opaque lax.switch failure inside the compiled executable
         new_state, _ = _round(get_arch(arch), [get_noc(noc)], jnp.int32(0),
                               geom, insn, core_app,
-                              state, (addr, is_write))
+                              state, (addr, is_write),
+                              probe_backend=probe_backend)
         return new_state
 
     out = jax.eval_shape(one_round, scalars,
@@ -675,24 +692,31 @@ def trace_kind(trace: Trace) -> tuple:
 
 def simulate(arch: str, trace: Trace,
              geom: GpuGeometry = PAPER_GEOMETRY, *,
-             noc: str = "ideal") -> SimResult:
+             noc: str = "ideal",
+             probe_backend: str = "lax") -> SimResult:
     """Run a trace through one architecture and summarize.
 
     ``noc`` selects the interconnect model (``repro.core.noc``); the
     default ``ideal`` reproduces the pre-NoC simulator bit-exactly.
+    ``probe_backend`` selects the L1 probe lowering
+    (``repro.core.probe``); every backend returns bit-identical
+    results — the axis trades compile target (XLA vs Pallas/Mosaic)
+    and speed, never semantics.
     """
     _check_arch(arch)
     _check_noc(noc)
+    _check_probe_backend(probe_backend)
     structure, scalars = split_geometry(geom)
     stats = jax.device_get(_simulate(
         (arch,), (noc,), _point_arrays(_trace_arrays(trace), scalars),
-        structure, trace.n_apps))
+        structure, trace.n_apps, probe_backend))
     return _summarize(stats, trace)
 
 
 def simulate_batch(arch: str, traces: Sequence[Trace],
                    geom: GpuGeometry = PAPER_GEOMETRY, *,
-                   noc: str = "ideal") -> List[SimResult]:
+                   noc: str = "ideal",
+                   probe_backend: str = "lax") -> List[SimResult]:
     """Run many same-shape traces through one architecture in one call.
 
     The traces are stacked on a new leading axis and the scanned
@@ -705,6 +729,7 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
     """
     _check_arch(arch)
     _check_noc(noc)
+    _check_probe_backend(probe_backend)
     if not traces:
         return []
     kinds = {trace_kind(t) for t in traces}
@@ -729,24 +754,28 @@ def simulate_batch(arch: str, traces: Sequence[Trace],
                 jax.tree.map(lambda s: jnp.broadcast_to(s, (B,)), scalars),
                 jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32)))
     stats = jax.device_get(_simulate_batch((arch,), (noc,), batched,
-                                           structure, n_apps))
+                                           structure, n_apps,
+                                           probe_backend))
     return [_summarize(jax.tree.map(lambda a: a[b], stats), traces[b])
             for b in range(len(traces))]
 
 
 def simulate_many(arch: str, traces: Sequence[Trace],
                   geom: GpuGeometry = PAPER_GEOMETRY, *,
-                  noc: str = "ideal") -> List[SimResult]:
+                  noc: str = "ideal",
+                  probe_backend: str = "lax") -> List[SimResult]:
     """``simulate_batch`` over arbitrary traces: group by kind, preserve
     input order."""
     _check_arch(arch)
     _check_noc(noc)
+    _check_probe_backend(probe_backend)
     groups: Dict[tuple, List[int]] = {}
     for i, t in enumerate(traces):
         groups.setdefault(trace_kind(t), []).append(i)
     out: List[SimResult] = [None] * len(traces)  # type: ignore[list-item]
     for idxs in groups.values():
         for i, r in zip(idxs, simulate_batch(
-                arch, [traces[i] for i in idxs], geom, noc=noc)):
+                arch, [traces[i] for i in idxs], geom, noc=noc,
+                probe_backend=probe_backend)):
             out[i] = r
     return out

@@ -7,6 +7,9 @@
     traces  : :class:`Trace` points (e.g. all kernels of an app)
     nocs    : interconnect-model names (``repro.core.noc`` registry;
               defaults to the bit-exact ``ideal``)
+    probe_backends : L1 probe lowerings (``repro.core.probe``;
+              defaults to the fused ``lax`` path — backends return
+              bit-identical results but compile separate executables)
 
 — and runs every point through the round-pipeline simulator while
 compiling as few executables as possible:
@@ -33,7 +36,7 @@ compiling as few executables as possible:
 
 An executable is therefore keyed by (arch dataflow group, NoC model
 group, geometry structure, trace *kind* = shape + insn shape + app
-count, padded batch size, device count); everything else — policy
+count, probe backend, padded batch size, device count); everything else — policy
 choice, NoC choice, timing scalars, addresses, instruction mix,
 app-to-core assignment — is data. NoC models stack exactly like
 policy families (``NocModel.stack_key``; the built-ins all share one
@@ -62,20 +65,25 @@ from repro.core.simulator import (SimResult, Trace, _check_arch, _check_noc,
                                   trace_kind)
 from repro.core.arch import get_arch, registered_archs
 from repro.core.noc import get_noc, registered_nocs
-from repro.sharding.compat import make_mesh_1d, shard_map
+from repro.core.probe import check_probe_backend
+from repro.sharding.compat import make_mesh_1d, shard_map, shard_map_norep
 from jax.sharding import PartitionSpec as P
 
 
 class SweepPoint(NamedTuple):
-    """One (arch, geometry, trace[, noc]) grid point.
+    """One (arch, geometry, trace[, noc[, probe_backend]]) grid point.
 
     ``noc`` selects the interconnect model (``repro.core.noc``); the
     default ``ideal`` keeps every pre-NoC grid bit-exact.
+    ``probe_backend`` selects the L1 probe lowering
+    (``repro.core.probe``); backends return bit-identical results, so
+    the axis only changes which executable serves the point.
     """
     arch: str
     geom: GpuGeometry
     trace: Trace
     noc: str = "ideal"
+    probe_backend: str = "lax"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,9 +121,10 @@ def compile_count() -> int:
 
 def _sharded_executable(group: Tuple[str, ...], nocs: Tuple[str, ...],
                         structure: GeomStructure,
-                        n_devices: int, n_apps: int):
+                        n_devices: int, n_apps: int,
+                        probe_backend: str = "lax"):
     """The jitted, device-sharded, vmapped simulator for one bucket."""
-    key = (group, nocs, structure, n_devices, n_apps)
+    key = (group, nocs, structure, n_devices, n_apps, probe_backend)
     fn = _EXEC_MEMO.get(key)
     if fn is None:
         mesh = make_mesh_1d(n_devices, "grid")
@@ -123,10 +132,16 @@ def _sharded_executable(group: Tuple[str, ...], nocs: Tuple[str, ...],
         def local_batch(point_arrays):
             return jax.vmap(
                 lambda pa: _sim_core(group, nocs, pa, structure,
-                                     n_apps))(point_arrays)
+                                     n_apps, probe_backend))(point_arrays)
 
-        fn = jax.jit(shard_map(local_batch, mesh=mesh,
-                               in_specs=P("grid"), out_specs=P("grid")))
+        # Pallas backends embed a pallas_call, which has no shard_map
+        # replication rule — disable the check for those buckets only
+        # (the device-sharded grid axis is fully partitioned anyway, so
+        # the check never had anything to prove here).
+        smap = (shard_map_norep if probe_backend.startswith("pallas")
+                else shard_map)
+        fn = jax.jit(smap(local_batch, mesh=mesh,
+                          in_specs=P("grid"), out_specs=P("grid")))
         _EXEC_MEMO[key] = fn
     return fn
 
@@ -179,13 +194,13 @@ def _signature(group: Tuple[str, ...], arch: str, structure: GeomStructure,
                round_shape: Tuple[int, int],
                insn_shape: Tuple[int, ...] = (), n_apps: int = 1,
                noc_group: Tuple[str, ...] = ("ideal",),
-               noc: str = "ideal"):
+               noc: str = "ideal", probe_backend: str = "lax"):
     key = (group, arch, structure, round_shape, insn_shape, n_apps,
-           noc_group, noc)
+           noc_group, noc, probe_backend)
     if key not in _SIG_MEMO:
         _SIG_MEMO[key] = round_signature(group, arch, structure,
                                          round_shape, insn_shape, n_apps,
-                                         noc_group, noc)
+                                         noc_group, noc, probe_backend)
     return _SIG_MEMO[key]
 
 
@@ -203,12 +218,14 @@ class SweepGrid:
     def __init__(self, archs: Sequence[str],
                  geoms: Optional[Sequence[GpuGeometry]] = None,
                  traces: Sequence[Trace] = (),
-                 nocs: Sequence[str] = ("ideal",)):
+                 nocs: Sequence[str] = ("ideal",),
+                 probe_backends: Sequence[str] = ("lax",)):
         geoms = list(geoms) if geoms is not None else [PAPER_GEOMETRY]
         traces = list(traces)   # tolerate one-shot iterables
         self.points: List[SweepPoint] = [
-            SweepPoint(a, g, t, n)
-            for a in archs for g in geoms for n in nocs for t in traces]
+            SweepPoint(a, g, t, n, pb)
+            for a in archs for g in geoms for n in nocs
+            for pb in probe_backends for t in traces]
         self._validate()
 
     @classmethod
@@ -223,6 +240,8 @@ class SweepGrid:
             _check_arch(arch)
         for noc in {p.noc for p in self.points}:
             _check_noc(noc)
+        for backend in {p.probe_backend for p in self.points}:
+            check_probe_backend(backend)
         seen = set()
         for p in self.points:
             if id(p.geom) not in seen:
@@ -263,15 +282,17 @@ class SweepGrid:
             # eval_shape tracings by the NoC axis.
             combos = {(geom_structure(p.geom), p.trace.addr.shape[1:],
                        np.shape(p.trace.insn_per_req), p.trace.n_apps,
-                       noc_group_of[p.noc], noc_group_of[p.noc][0])
+                       noc_group_of[p.noc], noc_group_of[p.noc][0],
+                       p.probe_backend)
                       for p in self.points if p.arch in members}
-            for structure, round_shape, insn_shape, n_apps, ngroup, noc \
-                    in combos:
+            for structure, round_shape, insn_shape, n_apps, ngroup, noc, \
+                    backend in combos:
                 ref = _signature(group, group[0], structure, round_shape,
-                                 insn_shape, n_apps, ngroup, noc)
+                                 insn_shape, n_apps, ngroup, noc, backend)
                 for arch in group[1:]:
                     if _signature(group, arch, structure, round_shape,
-                                  insn_shape, n_apps, ngroup, noc) != ref:
+                                  insn_shape, n_apps, ngroup, noc,
+                                  backend) != ref:
                         raise ValueError(
                             f"stack_key {key!r}: architecture {arch!r} "
                             f"does not share {group[0]!r}'s round "
@@ -287,15 +308,18 @@ class SweepGrid:
             members = set(ngroup)
             combos = {(geom_structure(p.geom), p.trace.addr.shape[1:],
                        np.shape(p.trace.insn_per_req), p.trace.n_apps,
-                       p.arch)
+                       p.arch, p.probe_backend)
                       for p in self.points if p.noc in members}
-            for structure, round_shape, insn_shape, n_apps, arch in combos:
+            for structure, round_shape, insn_shape, n_apps, arch, backend \
+                    in combos:
                 agroup = (arch,)
                 ref = _signature(agroup, arch, structure, round_shape,
-                                 insn_shape, n_apps, ngroup, ngroup[0])
+                                 insn_shape, n_apps, ngroup, ngroup[0],
+                                 backend)
                 for noc in ngroup[1:]:
                     if _signature(agroup, arch, structure, round_shape,
-                                  insn_shape, n_apps, ngroup, noc) != ref:
+                                  insn_shape, n_apps, ngroup, noc,
+                                  backend) != ref:
                         raise ValueError(
                             f"NoC stack_key {key!r}: model {noc!r} does "
                             f"not share {ngroup[0]!r}'s round dataflow "
@@ -325,21 +349,24 @@ class SweepGrid:
                 splits[geom] = split_geometry(geom)
             return splits[geom]
 
-        # Execution buckets: (group, NoC group, structure, trace kind)
-        # — kind = (addr shape, insn shape, n_apps), so multi-app mixes
-        # bucket apart from solo traces but together with each other
-        # (no per-mix recompilation), and stacked NoC models ride the
-        # same executable as their family.
+        # Execution buckets: (group, NoC group, structure, trace kind,
+        # probe backend) — kind = (addr shape, insn shape, n_apps), so
+        # multi-app mixes bucket apart from solo traces but together
+        # with each other (no per-mix recompilation), and stacked NoC
+        # models ride the same executable as their family. Probe
+        # backends bucket apart: they lower different programs.
         buckets: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
             key = (group_of[p.arch], noc_group_of[p.noc],
-                   split(p.geom)[0], trace_kind(p.trace))
+                   split(p.geom)[0], trace_kind(p.trace),
+                   p.probe_backend)
             buckets.setdefault(key, []).append(i)
 
         results: List[Optional[SimResult]] = [None] * len(self.points)
         used_execs: set = set()
         new_compiles = 0
-        for (group, noc_group, structure, kind), idxs in buckets.items():
+        for (group, noc_group, structure, kind, backend), idxs \
+                in buckets.items():
             _, insn_shape, n_apps = kind
             B = len(idxs)
             pad = (-B) % D
@@ -365,12 +392,14 @@ class SweepGrid:
                 [group.index(p.arch) for p in pts], jnp.int32)
             noc_idx = jnp.asarray(
                 [noc_group.index(p.noc) for p in pts], jnp.int32)
-            exec_key = (group, noc_group, structure, kind, B + pad, D)
+            exec_key = (group, noc_group, structure, kind, backend,
+                        B + pad, D)
             used_execs.add(exec_key)
             if exec_key not in _COMPILED_KEYS:
                 _COMPILED_KEYS.add(exec_key)
                 new_compiles += 1
-            fn = _sharded_executable(group, noc_group, structure, D, n_apps)
+            fn = _sharded_executable(group, noc_group, structure, D,
+                                     n_apps, backend)
             stats = jax.device_get(
                 fn((addr, is_write, insn, core_app, scalars, policy_idx,
                     noc_idx)))

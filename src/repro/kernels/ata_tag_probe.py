@@ -52,21 +52,15 @@ def _probe_kernel(set_ref, qtag_ref, tags_ref, valid_ref,
     ways_ref[...] = jnp.argmax(match, axis=-1).astype(jnp.int32)
 
 
+def default_interpret() -> bool:
+    """Interpret off-TPU (CPU/GPU validation), compile on TPU."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("br", "bc", "interpret"))
-def ata_tag_probe(set_idx: jax.Array, qtag: jax.Array, tags: jax.Array,
-                  valid: jax.Array, *, br: int = DEFAULT_BR,
-                  bc: int = DEFAULT_BC, interpret: bool = True):
-    """Probe R request tags against C aggregated tag arrays.
-
-    set_idx : (R,) int32   cache set selected by each request
-    qtag    : (R,) int32   request address tag
-    tags    : (C, S, W) int32 tag arrays of the C caches in the cluster
-    valid   : (C, S, W) bool/int8
-    returns (hits (R, C) bool, ways (R, C) int32)
-
-    ``interpret=True`` runs the kernel body on CPU (validation); on a
-    real TPU pass ``interpret=False``.
-    """
+def _ata_tag_probe_call(set_idx: jax.Array, qtag: jax.Array,
+                        tags: jax.Array, valid: jax.Array, *, br: int,
+                        bc: int, interpret: bool):
     R = set_idx.shape[0]
     C, S, W = tags.shape
     br = min(br, R)
@@ -95,3 +89,27 @@ def ata_tag_probe(set_idx: jax.Array, qtag: jax.Array, tags: jax.Array,
     )(set_idx.astype(jnp.int32), qtag.astype(jnp.int32),
       tags.astype(jnp.int32), valid.astype(jnp.int8))
     return hits.astype(bool), ways
+
+
+def ata_tag_probe(set_idx: jax.Array, qtag: jax.Array, tags: jax.Array,
+                  valid: jax.Array, *, br: int = DEFAULT_BR,
+                  bc: int = DEFAULT_BC,
+                  interpret: bool | None = None):
+    """Probe R request tags against C aggregated tag arrays.
+
+    set_idx : (R,) int32   cache set selected by each request
+    qtag    : (R,) int32   request address tag
+    tags    : (C, S, W) int32 tag arrays of the C caches in the cluster
+    valid   : (C, S, W) bool/int8
+    returns (hits (R, C) bool, ways (R, C) int32)
+
+    ``interpret=None`` (the default) auto-detects the platform: the
+    kernel body is interpreted on CPU/GPU (validation) and compiled by
+    Mosaic on a real TPU. The resolution happens *here*, outside the
+    jit boundary, so callers no longer hard-code an interpret mode into
+    the static args.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ata_tag_probe_call(set_idx, qtag, tags, valid, br=br, bc=bc,
+                               interpret=interpret)

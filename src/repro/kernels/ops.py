@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.ata_probe_rank import ata_probe_rank as _probe_rank_kernel
 from repro.kernels.ata_tag_probe import ata_tag_probe as _probe_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
@@ -26,6 +27,19 @@ def ata_probe(set_idx, qtag, tags, valid, *, impl: str = "ref", **kw):
         return _ref.ata_tag_probe_ref(set_idx, qtag, tags, valid)
     return _probe_kernel(set_idx, qtag, tags, valid,
                          interpret=(impl == "interpret"), **kw)
+
+
+def ata_probe_rank(set_idx, qtag, core, cluster_base, deny, tags, valid,
+                   dirty, *, cluster_size: int, impl: str = "ref", **kw):
+    """Fused probe + winner pick + remote-port arbitration (one pass)."""
+    if impl == "ref":
+        return _ref.ata_probe_rank_ref(set_idx, qtag, core, cluster_base,
+                                       deny, tags, valid, dirty,
+                                       cluster_size=cluster_size)
+    return _probe_rank_kernel(set_idx, qtag, core, cluster_base, deny,
+                              tags, valid, dirty,
+                              cluster_size=cluster_size,
+                              interpret=(impl == "interpret"), **kw)
 
 
 def attention(q, k, v, kv_len=None, *, causal=True, window=None,

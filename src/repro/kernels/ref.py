@@ -22,6 +22,52 @@ def ata_tag_probe_ref(set_idx, qtag, tags, valid):
     return hits, ways
 
 
+def ata_probe_rank_ref(set_idx, qtag, core, cluster_base, deny, tags,
+                       valid, dirty, *, cluster_size: int):
+    """Fused probe + winner pick + port arbitration, unblocked.
+
+    Mirrors ``repro.kernels.ata_probe_rank.ata_probe_rank``: per
+    request, compare against every cache's selected set, report the
+    self-array hit, pick the first (lowest-id) hitting cluster peer,
+    and rank the serviceable remote hits at their serving caches' data
+    ports in request order. Returns
+    (local_hit, hit_way, remote_ok, src_cache, prank, psize), all (R,).
+    """
+    C = tags.shape[0]
+    sel_tags = tags[:, set_idx, :]              # (C, R, W)
+    sel_valid = valid[:, set_idx, :].astype(bool)
+    sel_dirty = dirty[:, set_idx, :].astype(bool)
+    match = (sel_tags == qtag[None, :, None]) & sel_valid
+    hit_c = match.any(axis=-1).T                # (R, C)
+    dirty_c = (match & sel_dirty).any(axis=-1).T
+    way_c = jnp.argmax(match, axis=-1).T.astype(jnp.int32)
+
+    cid = jnp.arange(C, dtype=jnp.int32)[None, :]
+    is_self = cid == core[:, None]
+    in_cluster = ((cid >= cluster_base[:, None])
+                  & (cid < cluster_base[:, None] + cluster_size))
+    local_hit = (hit_c & is_self).any(axis=-1)
+    hit_way = jnp.take_along_axis(way_c, core[:, None], axis=1)[:, 0]
+
+    rmask = hit_c & in_cluster & ~is_self
+    any_remote = rmask.any(axis=-1)
+    src = jnp.min(jnp.where(rmask, cid, jnp.int32(C)), axis=-1)
+    src_cache = jnp.where(any_remote, src, cluster_base).astype(jnp.int32)
+    first = rmask & (cid == src_cache[:, None])
+    src_dirty = (first & dirty_c).any(axis=-1)
+    remote_ok = ((~deny.astype(bool)) & ~local_hit & any_remote
+                 & ~src_dirty)
+
+    oh = (remote_ok[:, None] & (cid == src_cache[:, None])
+          ).astype(jnp.int32)                   # (R, C)
+    before = jnp.cumsum(oh, axis=0) - oh        # exclusive, request order
+    prank = jnp.sum(before * oh, axis=-1)
+    counts = jnp.sum(oh, axis=0)
+    psize = jnp.where(remote_ok, counts[src_cache], 0)
+    return (local_hit, hit_way, remote_ok, src_cache,
+            prank.astype(jnp.int32), psize.astype(jnp.int32))
+
+
 # --------------------------------------------------------------------------
 # blocked causal / local attention with GQA
 # --------------------------------------------------------------------------

@@ -23,6 +23,23 @@ except ImportError:  # jax 0.4.x
 HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
 
 
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check disabled.
+
+    Required when the mapped body contains ops without a replication
+    rule — ``pallas_call`` is the one in this repo (the fused-probe
+    simulator backends). The flag's spelling has moved across jax
+    releases (``check_rep`` -> ``check_vma``), so resolve it here.
+    """
+    import inspect
+    params = inspect.signature(shard_map).parameters
+    for kw in ("check_rep", "check_vma"):
+        if kw in params:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **{kw: False})
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     """``jax.make_mesh`` with Auto axis types where the API supports them."""
     if HAS_AXIS_TYPES:

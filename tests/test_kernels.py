@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.ata_tag_probe import ata_tag_probe
+from repro.kernels.ata_tag_probe import ata_tag_probe, default_interpret
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.wkv6 import wkv6
 
@@ -49,6 +49,122 @@ def test_ata_tag_probe_planted_hits():
     hits, ways = ata_tag_probe(set_idx, qtag, tags, valid, br=32, bc=2)
     assert bool(hits[5, 2]) and int(ways[5, 2]) == 3
     assert int(hits.sum()) >= 1
+
+
+def test_ata_tag_probe_interpret_autodetect():
+    """interpret=None resolves per platform *outside* the jit boundary:
+    on this CPU container it must pick the interpreter (and work)."""
+    assert default_interpret() is (jax.default_backend() != "tpu")
+    C, S, W, R = 2, 4, 8, 32
+    tags = jnp.asarray(RNG.integers(0, 64, (C, S, W)), jnp.int32)
+    valid = jnp.asarray(RNG.random((C, S, W)) < 0.7)
+    qtag = jnp.asarray(RNG.integers(0, 64, R), jnp.int32)
+    set_idx = jnp.asarray(RNG.integers(0, S, R), jnp.int32)
+    h_auto, _ = ata_tag_probe(set_idx, qtag, tags, valid)
+    h_exp, _ = ata_tag_probe(set_idx, qtag, tags, valid,
+                             interpret=default_interpret())
+    np.testing.assert_array_equal(np.asarray(h_auto), np.asarray(h_exp))
+
+
+# ---------------------------------------------------------------------------
+# ata_probe_rank (fused probe + winner pick + port arbitration)
+# ---------------------------------------------------------------------------
+def _rank_inputs(R, C, S, W, G, seed=0, tag_lo=0, tag_hi=48):
+    rng = np.random.default_rng(seed)
+    tags = jnp.asarray(rng.integers(tag_lo, tag_hi, (C, S, W)), jnp.int32)
+    valid = jnp.asarray(rng.random((C, S, W)) < 0.7)
+    dirty = jnp.asarray(np.asarray(valid) & (rng.random((C, S, W)) < 0.2))
+    qtag = jnp.asarray(rng.integers(tag_lo, tag_hi, R), jnp.int32)
+    set_idx = jnp.asarray(rng.integers(0, S, R), jnp.int32)
+    core = jnp.asarray(rng.integers(0, C, R), jnp.int32)
+    cbase = (core // G) * G
+    deny = jnp.asarray(rng.random(R) < 0.2)
+    return set_idx, qtag, core, cbase, deny, tags, valid, dirty
+
+
+def _assert_rank_equal(got, want):
+    lh, rok = want[0], want[2]
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(lh))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(rok))
+    masks = (None, lh, None, rok, rok, rok)
+    for a, b, m in zip(got, want, masks):
+        if m is None:
+            continue
+        np.testing.assert_array_equal(
+            np.where(np.asarray(m), np.asarray(a), 0),
+            np.where(np.asarray(m), np.asarray(b), 0))
+
+
+@pytest.mark.parametrize("R,C,S,W,G,br,seed", [
+    (128, 8, 8, 64, 4, 64, 0),
+    (256, 12, 8, 16, 4, 128, 0),
+    (64, 4, 16, 8, 2, 64, 0),
+    (60, 6, 4, 8, 3, 16, 1),      # R % br != 0: dead-lane padding
+    (150, 30, 8, 64, 10, 128, 0),  # paper geometry at m=5, padded tile
+])
+def test_ata_probe_rank_sweep(R, C, S, W, G, br, seed):
+    args = _rank_inputs(R, C, S, W, G, seed=seed)
+    want = ref.ata_probe_rank_ref(*args, cluster_size=G)
+    got = ops.ata_probe_rank(*args, cluster_size=G, impl="interpret",
+                             br=br)
+    assert np.asarray(want[0]).any() and np.asarray(want[2]).any()
+    _assert_rank_equal(got, want)
+
+
+def test_ata_probe_rank_planted_arbitration():
+    """Three requests hitting the same peer must queue 0,1,2 in request
+    order with group size 3; a denied fourth stays out of the group."""
+    C, S, W, G = 4, 4, 4, 4
+    R = 8
+    tags = jnp.zeros((C, S, W), jnp.int32)
+    valid = jnp.zeros((C, S, W), bool)
+    dirty = jnp.zeros((C, S, W), bool)
+    # line 7 lives only in cache 2, set 1, way 3
+    tags = tags.at[2, 1, 3].set(7)
+    valid = valid.at[2, 1, 3].set(True)
+    set_idx = jnp.full((R,), 1, jnp.int32)
+    qtag = jnp.where(jnp.arange(R) < 4, 7, 9).astype(jnp.int32)
+    core = jnp.asarray([0, 1, 3, 0, 1, 2, 3, 0], jnp.int32)
+    cbase = jnp.zeros((R,), jnp.int32)
+    deny = jnp.asarray([False, False, False, True,
+                        False, False, False, False])
+    out = ops.ata_probe_rank(set_idx, qtag, core, cbase, deny, tags,
+                             valid, dirty, cluster_size=G,
+                             impl="interpret", br=4)
+    local, way, rok, src, rank, size = (np.asarray(x) for x in out)
+    assert not local.any()
+    assert rok.tolist() == [True, True, True, False,
+                            False, False, False, False]
+    assert src[:3].tolist() == [2, 2, 2]
+    assert rank[:3].tolist() == [0, 1, 2]       # request order
+    assert size[:3].tolist() == [3, 3, 3]
+    assert size[3] == 0                          # denied: no port slot
+    ref_out = ref.ata_probe_rank_ref(set_idx, qtag, core, cbase, deny,
+                                     tags, valid, dirty, cluster_size=G)
+    _assert_rank_equal(out, ref_out)
+
+
+def test_ata_probe_rank_counts_carry_across_tiles():
+    """br=4 over R=16 with every request targeting one peer: ranks must
+    continue across tile boundaries (the carried VMEM counter), not
+    restart at 0 per tile."""
+    C, S, W, G = 2, 2, 2, 2
+    R = 16
+    tags = jnp.zeros((C, S, W), jnp.int32).at[1, 0, 1].set(5)
+    valid = jnp.zeros((C, S, W), bool).at[1, 0, 1].set(True)
+    dirty = jnp.zeros((C, S, W), bool)
+    set_idx = jnp.zeros((R,), jnp.int32)
+    qtag = jnp.full((R,), 5, jnp.int32)
+    core = jnp.zeros((R,), jnp.int32)
+    cbase = jnp.zeros((R,), jnp.int32)
+    deny = jnp.zeros((R,), bool)
+    out = ops.ata_probe_rank(set_idx, qtag, core, cbase, deny, tags,
+                             valid, dirty, cluster_size=G,
+                             impl="interpret", br=4)
+    _, _, rok, _, rank, size = (np.asarray(x) for x in out)
+    assert rok.all()
+    assert rank.tolist() == list(range(R))
+    assert (size == R).all()
 
 
 # ---------------------------------------------------------------------------

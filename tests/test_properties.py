@@ -242,6 +242,23 @@ def test_victim_zero_ways_never_changes_ata_behavior(data):
     _assert_outcomes_bit_equal(vic, base)
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_probe_backend_never_changes_the_round(data):
+    """The probe backend is a lowering choice, not a model choice: on
+    any warmed state and request mix, every CPU-runnable backend's
+    ``l1_stage`` is bit-identical — outputs *and* carried tag state —
+    so IPC (a pure function of the rounds) cannot depend on it."""
+    state, reqs = _zoo_state_and_reqs(data)
+    t = jnp.int32(7)
+    base = AtaPolicy().l1_stage(_ZOO_GEOM, state, reqs, t,
+                                backend="lax")
+    for backend in ("lax_unfused", "pallas_interpret"):
+        got = AtaPolicy().l1_stage(_ZOO_GEOM, state, reqs, t,
+                                   backend=backend)
+        _assert_outcomes_bit_equal(got, base)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.data())
 def test_ciao_zero_threshold_degenerates_to_private(data):

@@ -74,6 +74,47 @@ def test_trend_rows_flag_drift_beyond_rtol(history):
     assert "solo,ata/noc_bw/16.0,ipc,2026-07-29,21.0" in csv
 
 
+def _simspeed(rps_lax, rps_unfused, rounds=64):
+    return {
+        "kind": "simspeed", "schema": 1,
+        "config": {"app": "cfd", "kernel": 0, "arch": "ata",
+                   "rounds": rounds, "n_geoms": 13},
+        "sweep": {"n_executables": 14},
+        "cells": [
+            {"backend": "lax", "rounds_per_sec": rps_lax,
+             "wall_s": 1.0, "n_points": 13, "rounds": rounds,
+             "n_executables": 7},
+            {"backend": "lax_unfused", "rounds_per_sec": rps_unfused,
+             "wall_s": 1.0, "n_points": 13, "rounds": rounds,
+             "n_executables": 7},
+        ],
+        "headline": {"fused_speedup": rps_lax / rps_unfused},
+    }
+
+
+def test_simspeed_reports_join_the_series(tmp_path):
+    """Throughput reports live in the same history directory as the
+    sensitivity reports; the solo/mix/noc parser must skip them (their
+    cells have no arch/knob keys) and emit simspeed series instead."""
+    d = tmp_path / "bench_history"
+    d.mkdir()
+    (d / "2026-08-01.json").write_text(json.dumps(_report(20.0)))
+    (d / "2026-08-02_simspeed.json").write_text(
+        json.dumps(_simspeed(4400.0, 4000.0)))
+    (d / "2026-08-03_simspeed.json").write_text(
+        json.dumps(_simspeed(4600.0, 4100.0)))
+    series = bench_trend._cell_series(bench_trend.load_history(str(d)))
+    assert [v for _, v in series[("simspeed", "lax", "rounds_per_sec")]] \
+        == [4400.0, 4600.0]
+    assert ("simspeed", "lax_unfused", "rounds_per_sec") in series
+    ratios = series[("simspeed", "lax/lax_unfused", "fused_speedup")]
+    assert [v for _, v in ratios] == [4400.0 / 4000.0, 4600.0 / 4100.0]
+    # the sensitivity report still parses alongside
+    assert ("solo", "ata", "noc_bw", 16.0, "ipc") in series
+    rows = bench_trend.trend_rows(series, rtol=0.05)
+    assert all(not r["flagged"] for r in rows)
+
+
 def test_cli_writes_outputs_and_strict_gates(history, tmp_path):
     md = str(tmp_path / "trend.md")
     csv = str(tmp_path / "trend.csv")

@@ -131,8 +131,8 @@ def test_sweep_grid_rejects_stack_key_dataflow_mismatch(temp_arch):
     class BadStack(AtaPolicy):
         name: str = "test_bad_stack"
 
-        def l1_stage(self, geom, l1, reqs, t):
-            out = super().l1_stage(geom, l1, reqs, t)
+        def l1_stage(self, geom, l1, reqs, t, *, backend="lax"):
+            out = super().l1_stage(geom, l1, reqs, t, backend=backend)
             # an extra carried state array: a different round dataflow
             return out._replace(l1=dict(out.l1, extra=jnp.zeros(3)))
 
