@@ -1,0 +1,165 @@
+"""Serving-engine scale benchmark: shards x traffic mix x policy.
+
+Replays multi-tenant :class:`~repro.core.trace.serving.ServingMix`
+request streams through the vectorized serving engine
+(``repro.serving.engine``) at production request counts — the default
+full run targets >= 1,000,000 requests per (shards, mix) stream, all
+in ``lax.scan`` steps with no per-request Python — and reports per
+cell: hit rate, probe/fetch/recompute counters, replay throughput
+(requests per wall-second), and modeled p50/p99 request latency.
+
+The grid is the paper's story at serving scale: ``broadcast`` pays a
+probe message per locally-missing block per peer, ``ata``'s replicated
+block directory pays zero and still fetches remote blocks it *knows*
+exist, ``private`` recomputes everything it lacks. More shards widen
+the gap (more peers to probe, more remote reuse to find).
+
+``--json`` writes a ``kind="serving"`` report gated in CI against
+``benchmarks/baselines/serving_rounds512.json`` by
+``scripts/check_bench_regression.py`` (dispatching to
+``repro.core.report.compare_serving``): hit rate and probe-message
+counts are the blocking metrics — the stream is seeded and the engine
+integer-deterministic, so probe counts gate *exactly*; wall-clock
+throughput is informational (host-dependent) but tracked by the
+nightly ``scripts/bench_trend.py`` history.
+"""
+import argparse
+import json
+import math
+import time
+
+from benchmarks.common import emit
+
+SCHEMA = 1
+SHARD_COUNTS = (8, 16)
+#: >= 2 traffic mixes: a high-sharing diurnal pair and a bursty
+#: low-sharing pair (tenant table: repro.core.trace.serving.TENANTS).
+MIX_NAMES = (("chat", "rag"), ("chat", "batch"))
+#: Rounds used when --rounds is not given: calibrated per (shards,
+#: mix) so every stream carries at least --requests requests.
+DEFAULT_REQUESTS = 1_000_000
+_CALIB_ROUNDS = 2048
+
+
+def _mixes():
+    from repro.core.trace.serving import ServingMix
+    return tuple(ServingMix(names, name="+".join(names))
+                 for names in MIX_NAMES)
+
+
+def _rounds_for(mix, n_shards, target, seed):
+    """Rounds so the mix's stream offers >= target admitted requests."""
+    probe = mix.make_stream(n_shards=n_shards, rounds=_CALIB_ROUNDS,
+                            seed=seed)
+    occupancy = max(probe.n_requests / (_CALIB_ROUNDS * n_shards), 1e-3)
+    return math.ceil(1.02 * target / (occupancy * n_shards))
+
+
+def run(rounds=None, n_requests=DEFAULT_REQUESTS, shards=SHARD_COUNTS,
+        mixes=None, policies=None, cfg=None, seed=0, out_json=None):
+    from repro.serving import SERVING_POLICIES, ServingConfig, serve_stream
+    cfg = cfg or ServingConfig()
+    mixes = _mixes() if mixes is None else mixes
+    policies = tuple(policies or SERVING_POLICIES)
+    cells = []
+    probe_msgs = {}
+    hit_rates = {}
+    for s in shards:
+        for mix in mixes:
+            r = rounds if rounds is not None else _rounds_for(
+                mix, s, n_requests, seed)
+            stream = mix.make_stream(n_shards=s, rounds=r, seed=seed)
+            if rounds is None:
+                assert stream.n_requests >= n_requests, \
+                    (stream.n_requests, n_requests)
+            for policy in policies:
+                t0 = time.perf_counter()
+                res = serve_stream(policy, stream, cfg)
+                wall = time.perf_counter() - t0
+                rps = stream.n_requests / wall
+                cell = {
+                    "shards": s, "mix": mix.mix_id, "policy": policy,
+                    "rounds": r, "requests": stream.n_requests,
+                    "hit_rate": res.hit_rate,
+                    "local_hits": res.local_hits,
+                    "remote_hits": res.remote_hits,
+                    "recomputed_blocks": res.recomputed_blocks,
+                    "probe_messages": res.probe_messages,
+                    "remote_fetch_blocks": res.remote_fetch_blocks,
+                    "p50_latency": res.p50_latency,
+                    "p99_latency": res.p99_latency,
+                    "throughput_rps": rps,
+                    "requests_per_kcycle": res.requests_per_kcycle,
+                    "load_imbalance": res.load_imbalance,
+                    "wall_s": wall,
+                }
+                cells.append(cell)
+                probe_msgs.setdefault(policy, 0)
+                probe_msgs[policy] += res.probe_messages
+                hit_rates.setdefault(policy, []).append(res.hit_rate)
+                emit(f"serving_scale.s{s}.{mix.mix_id}.{policy}.hit_rate",
+                     wall * 1e6, f"{res.hit_rate:.4f}")
+                emit(f"serving_scale.s{s}.{mix.mix_id}.{policy}.p99",
+                     wall * 1e6, f"{res.p99_latency:.1f}cyc "
+                     f"{rps:.0f}req/s")
+
+    headline = {}
+    if "broadcast" in probe_msgs and "ata" in probe_msgs:
+        # the paper's claim at serving scale: the replicated directory
+        # filters every probe message the broadcast baseline sends
+        headline["probes_filtered"] = probe_msgs["broadcast"] \
+            - probe_msgs["ata"]
+    if "ata" in hit_rates and "private" in hit_rates:
+        n = len(hit_rates["ata"])
+        headline["ata_vs_private_hit_gain"] = (
+            sum(hit_rates["ata"]) - sum(hit_rates["private"])) / n
+        emit("serving_scale.ata_vs_private_hit_gain", 0.0,
+             f"{headline['ata_vs_private_hit_gain']:+.4f}")
+
+    report = {
+        "kind": "serving",
+        "schema": SCHEMA,
+        "config": {
+            "shards": list(shards),
+            "mixes": [m.mix_id for m in mixes],
+            "policies": list(policies),
+            "rounds": rounds,
+            "n_requests": None if rounds is not None else n_requests,
+            "seed": seed,
+            "n_sets": cfg.n_sets, "n_ways": cfg.n_ways,
+            "noc": cfg.noc, "probe_backend": cfg.probe_backend,
+        },
+        "cells": cells,
+        "headline": headline,
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="fixed rounds per stream (CI smoke); default "
+                    "calibrates rounds to reach --requests")
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS,
+                    help="minimum requests per (shards, mix) stream "
+                    "(default 1,000,000)")
+    ap.add_argument("--shards", type=int, nargs="+",
+                    default=list(SHARD_COUNTS))
+    ap.add_argument("--noc", default="ideal",
+                    help="interconnect model pricing remote fetches")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the kind=serving report JSON here")
+    args = ap.parse_args()
+    from repro.serving import ServingConfig
+    print("name,us_per_call,derived")
+    run(rounds=args.rounds, n_requests=args.requests,
+        shards=tuple(args.shards), cfg=ServingConfig(noc=args.noc),
+        out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,21 @@
-"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json),
+plus an analytic roofline for the Pallas probe kernels.
 
 Per (arch x shape x mesh): the three terms in seconds, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and the
 roofline fraction = (MODEL_FLOPS/chips/peak) / max(term) — the score a
 perfect-efficiency implementation would push to 1.0.
+
+:func:`kernel_table` covers the simulator's own kernels — the
+standalone ``ata_tag_probe`` *and* the fused ``ata_probe_rank``
+(probe + winner rank + port arbitration, PR 6) — with an analytic
+roofline derived from their BlockSpecs: HBM bytes actually streamed
+per grid step (the tag state is re-read once per request tile — that
+re-read, not the compare, is what bounds both kernels), integer VPU
+ops, arithmetic intensity, and the memory/compute-bound time on the
+reference chip. Wall time is measured only on a real TPU backend
+(``jax.default_backend() == "tpu"``); the interpret path on CPU
+validates semantics, not speed, so off-TPU rows report the model only.
 """
 import glob
 import json
@@ -11,6 +23,12 @@ import pathlib
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
 PEAK_FLOPS = 197e12
+HBM_BW = 1.2e12          # bytes/s, reference-chip HBM stream rate
+PEAK_INT_OPS = 4.9e13    # int32 VPU lanes (no MXU help for equality)
+
+#: Canonical probe-kernel shape (matches benchmarks.kernel_micro):
+#: R requests against C caches of S sets x W ways, clusters of G.
+KERNEL_SHAPE = {"R": 1024, "C": 16, "S": 8, "W": 64, "G": 4}
 
 
 def load(mesh="sp"):
@@ -52,7 +70,109 @@ def table(mesh="sp"):
     return rows
 
 
+def kernel_model(name, shape=None):
+    """Analytic (bytes, int_ops) per call for a probe kernel.
+
+    Traffic follows the kernel BlockSpecs, not the array sizes: both
+    kernels hold the tag state resident per program but the grid walks
+    request tiles, so tags/valid(/dirty) stream from HBM once per tile
+    — ``R/br`` times per call. Ops count the one-hot set gather
+    (2 ops per (request, cache, set, way) lane: select + max) plus the
+    comparator group and per-request reductions.
+    """
+    s = dict(KERNEL_SHAPE, **(shape or {}))
+    R, C, S, W = s["R"], s["C"], s["S"], s["W"]
+    state = C * S * W
+    if name == "ata_tag_probe":
+        from repro.kernels.ata_tag_probe import DEFAULT_BC, DEFAULT_BR
+        br, bc = min(DEFAULT_BR, R), min(DEFAULT_BC, C)
+        tiles = (R // br) * (C // bc)
+        bytes_ = (tiles * (bc * S * W) * (4 + 1)   # tags + valid
+                  + (C // bc) * R * 8              # set_idx + qtag
+                  + R * C * 5)                     # hits + ways out
+        ops = R * C * W * (2 * S + 3)
+    elif name == "ata_probe_rank":
+        from repro.kernels.ata_probe_rank import DEFAULT_BR
+        br = min(DEFAULT_BR, R)
+        bytes_ = ((R // br) * state * (4 + 1 + 1)  # tags+valid+dirty
+                  + R * 19                         # 6 request vectors in
+                  + R * 14 + C * 4)                # 5 outputs + counts
+        # probe over the full cluster + winner one-hot rank + the
+        # grid-carried port-arbitration prefix counts
+        ops = R * C * W * (2 * S + 3) + R * C * (s["G"] + 6)
+    else:
+        raise ValueError(f"unknown kernel {name!r}")
+    return bytes_, ops
+
+
+def kernel_table(shape=None):
+    """Rows: (kernel, bytes, ops, intensity, mem_s, comp_s, bound,
+    measured_us or None)."""
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for name in ("ata_tag_probe", "ata_probe_rank"):
+        bytes_, ops = kernel_model(name, shape)
+        mem_s = bytes_ / HBM_BW
+        comp_s = ops / PEAK_INT_OPS
+        bound = "memory" if mem_s >= comp_s else "compute"
+        measured = _time_kernel(name, shape) if on_tpu else None
+        rows.append((name, bytes_, ops, ops / bytes_, mem_s, comp_s,
+                     bound, measured))
+    return rows
+
+
+def _time_kernel(name, shape=None, iters=20):
+    """Median wall us/call of the compiled Pallas kernel (TPU only)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    s = dict(KERNEL_SHAPE, **(shape or {}))
+    R, C, S, W, G = s["R"], s["C"], s["S"], s["W"], s["G"]
+    rng = np.random.default_rng(0)
+    tags = jnp.asarray(rng.integers(0, 4096, (C, S, W)), jnp.int32)
+    valid = jnp.asarray(rng.random((C, S, W)) < 0.7)
+    qtag = jnp.asarray(rng.integers(0, 4096, R), jnp.int32)
+    set_idx = jnp.asarray(rng.integers(0, S, R), jnp.int32)
+    if name == "ata_tag_probe":
+        call = lambda: ops.ata_probe(set_idx, qtag, tags, valid,  # noqa: E731
+                                     impl="pallas")
+    else:
+        core = jnp.asarray(rng.integers(0, C, R), jnp.int32)
+        cbase = (core // G) * G
+        deny = jnp.asarray(rng.random(R) < 0.2)
+        dirty = jnp.asarray(valid & (rng.random((C, S, W)) < 0.2))
+        call = lambda: ops.ata_probe_rank(                        # noqa: E731
+            set_idx, qtag, core, cbase, deny, tags, valid, dirty,
+            cluster_size=G, impl="pallas")
+    jax.block_until_ready(call())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def print_kernel_table(shape=None):
+    s = dict(KERNEL_SHAPE, **(shape or {}))
+    print(f"\n=== roofline: probe kernels (R={s['R']} C={s['C']} "
+          f"S={s['S']} W={s['W']}) ===")
+    print(f"{'kernel':16s} {'KB':>8s} {'ops':>10s} {'ops/B':>6s} "
+          f"{'mem_us':>8s} {'comp_us':>8s} {'bound':8s} {'meas_us':>8s}")
+    for name, b, o, ai, mem_s, comp_s, bound, meas in kernel_table(shape):
+        meas_col = f"{meas:>8.1f}" if meas is not None else f"{'-':>8s}"
+        print(f"{name:16s} {b / 1024:>8.1f} {o:>10d} {ai:>6.1f} "
+              f"{mem_s * 1e6:>8.2f} {comp_s * 1e6:>8.2f} {bound:8s} "
+              f"{meas_col}")
+
+
 def main():
+    print_kernel_table()
     for mesh, name in (("sp", "single-pod 16x16"), ("mp", "multi-pod 2x16x16")):
         print(f"\n=== roofline: {name} ===")
         print(f"{'arch':22s} {'shape':12s} {'bound':10s} {'comp_s':>8s} "

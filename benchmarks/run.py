@@ -2,7 +2,7 @@
 serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--rounds N] \
-      [--report-json PATH]
+      [--report-json PATH] [--serving-json PATH] [--serving-rounds N]
 
 --report-json additionally runs the contention-policy-zoo sensitivity
 sweep (``repro.core.report``: private/ata/ciao/victim over widened
@@ -16,6 +16,15 @@ drift vs the committed baseline (``benchmarks/baselines/``,
 ``scripts/check_bench_regression.py``; the gate is schema-versioned,
 so a schema-1 baseline still gates the solo cells of a schema-2
 report).
+
+--serving-json runs the serving-engine scale grid
+(``benchmarks.fig_serving_scale``: shards x traffic mix x serving
+policy through the vectorized ``repro.serving.engine``) and writes its
+``kind="serving"`` report there; ``--serving-rounds`` fixes the rounds
+per stream (CI smoke uses 512 to match
+``benchmarks/baselines/serving_rounds512.json``), while the default —
+and any ``--full`` run — calibrates rounds so every (shards, mix)
+stream replays at least 1,000,000 requests.
 
 --full uses every per-app kernel (Fig. 9 fidelity); default trims for
 CI speed on the 1-core container. --rounds truncates every trace (CI
@@ -40,6 +49,12 @@ def main() -> None:
     ap.add_argument("--report-json", default=None, metavar="PATH",
                     help="write the policy-zoo sensitivity report "
                     "(JSON + sibling .md) to PATH")
+    ap.add_argument("--serving-json", default=None, metavar="PATH",
+                    help="run the serving-engine scale grid and write "
+                    "its kind=serving report to PATH")
+    ap.add_argument("--serving-rounds", type=int, default=None,
+                    help="fixed rounds per serving stream (CI smoke: "
+                    "512); default calibrates to >= 1M requests")
     args = ap.parse_args()
     k = 0 if args.full else 1
     k9 = 0 if args.full else 3
@@ -96,6 +111,17 @@ def main() -> None:
     kernel_micro.run()
     serving_ata.run()
 
+    if args.serving_json:
+        from benchmarks import fig_serving_scale
+        t0 = time.perf_counter()
+        srep = fig_serving_scale.run(rounds=args.serving_rounds,
+                                     out_json=args.serving_json)
+        emit("serving.cells", (time.perf_counter() - t0) * 1e6,
+             len(srep["cells"]))
+        emit("serving.requests_total", 0.0,
+             sum(c["requests"] for c in srep["cells"]))
+        print(f"serving report: {args.serving_json}", file=sys.stderr)
+
     # roofline summary (reads dry-run artifacts if present)
     try:
         from benchmarks import roofline
@@ -106,6 +132,17 @@ def main() -> None:
         emit("roofline.cells_ok", 0.0, len(ok))
     except Exception as e:                      # noqa: BLE001
         print(f"roofline.skipped,0,{e!r}", file=sys.stderr)
+
+    # probe-kernel roofline: analytic everywhere, measured on TPU
+    try:
+        from benchmarks import roofline
+        for name, _, _, ai, mem_s, comp_s, bound, meas in \
+                roofline.kernel_table():
+            emit(f"roofline.kernel.{name}", meas if meas is not None
+                 else 0.0, f"{bound};ai={ai:.1f};"
+                 f"mem={mem_s * 1e6:.2f}us;comp={comp_s * 1e6:.2f}us")
+    except Exception as e:                      # noqa: BLE001
+        print(f"roofline.kernel.skipped,0,{e!r}", file=sys.stderr)
 
 
 if __name__ == "__main__":

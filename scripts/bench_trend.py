@@ -27,7 +27,10 @@ Reports are ordered by filename (ISO dates sort correctly); at least
 two are needed for drift, one still produces the tables. Simulator
 throughput reports (``benchmarks.sim_speed``, ``"kind": "simspeed"``)
 ride the same history directory: their per-backend rounds/sec and the
-fused-speedup ratio become ``simspeed`` series rows.
+fused-speedup ratio become ``simspeed`` series rows. Serving-engine
+reports (``benchmarks.fig_serving_scale``, ``"kind": "serving"``)
+likewise: per (shards x mix x policy) cell, hit rate, modeled p99
+latency, and host replay throughput become ``serving`` series rows.
 """
 import argparse
 import json
@@ -58,6 +61,18 @@ def _cell_series(reports: List[Tuple[str, dict]]
             if ratio is not None:
                 add(run, "simspeed", ("lax/lax_unfused",),
                     "fused_speedup", ratio)
+            continue
+        if rep.get("kind") == "serving":
+            # serving-engine reports: deterministic quality metrics
+            # (hit rate, modeled p99) + host-dependent replay
+            # throughput, per (shards x mix x policy) cell
+            for c in rep.get("cells", ()):
+                key = (c["shards"], c["mix"], c["policy"])
+                add(run, "serving", key, "hit_rate", c["hit_rate"])
+                add(run, "serving", key, "p99_latency",
+                    c["p99_latency"])
+                add(run, "serving", key, "throughput_rps",
+                    c["throughput_rps"])
             continue
         for c in rep.get("cells", ()):
             add(run, "solo", (c["arch"], c["knob"], c["value"]), "ipc",

@@ -29,6 +29,17 @@ one-sided) rather than host-dependent absolute rounds/sec
         benchmarks/baselines/simspeed_rounds64.json \
         BENCH_simspeed.json [--speedup-rtol 0.30]
 
+Serving-engine reports (``benchmarks.fig_serving_scale``,
+``"kind": "serving"``) dispatch to
+``repro.core.report.compare_serving``: per (shards x mix x policy)
+cell, probe-message counts gate *exactly* (the stream is seeded and
+the engine integer-deterministic) and hit rate within ``--hit-rtol``;
+host-dependent replay throughput is never gated:
+
+    PYTHONPATH=src python scripts/check_bench_regression.py \
+        benchmarks/baselines/serving_rounds512.json \
+        BENCH_serving.json [--hit-rtol 0.005]
+
 To update the baseline after an *intentional* performance or model
 change, regenerate it with the same configuration CI uses and commit:
 
@@ -36,12 +47,14 @@ change, regenerate it with the same configuration CI uses and commit:
         --report-json benchmarks/baselines/sensitivity_rounds96.json
     PYTHONPATH=src python -m benchmarks.sim_speed --rounds 64 \
         --json benchmarks/baselines/simspeed_rounds64.json
+    PYTHONPATH=src python -m benchmarks.fig_serving_scale --rounds 512 \
+        --json benchmarks/baselines/serving_rounds512.json
 """
 import argparse
 import sys
 
-from repro.core.report import (compare_reports, compare_simspeed,
-                               load_report)
+from repro.core.report import (compare_reports, compare_serving,
+                               compare_simspeed, load_report)
 
 
 def main() -> int:
@@ -58,10 +71,32 @@ def main() -> int:
     ap.add_argument("--rps-rtol", type=float, default=None,
                     help="gate absolute rounds/sec too (simspeed; "
                     "off by default — host-dependent)")
+    ap.add_argument("--hit-rtol", type=float, default=0.005,
+                    help="allowed per-cell hit-rate drift for serving "
+                    "reports (default 0.5%%; probe counts gate exactly)")
+    ap.add_argument("--latency-rtol", type=float, default=None,
+                    help="gate modeled p99 latency too (serving; off "
+                    "by default — moves with the cost model)")
     args = ap.parse_args()
 
     baseline = load_report(args.baseline)
     candidate = load_report(args.candidate)
+    if baseline.get("kind") == "serving":
+        failures = compare_serving(baseline, candidate,
+                                   hit_rtol=args.hit_rtol,
+                                   latency_rtol=args.latency_rtol)
+        if failures:
+            print(f"serving regression gate FAILED "
+                  f"({len(failures)} finding(s)):", file=sys.stderr)
+            for f in failures:
+                print(f"  - {f}", file=sys.stderr)
+            print("(intentional change? regenerate the baseline — see "
+                  "--help)", file=sys.stderr)
+            return 1
+        print(f"serving regression gate OK: "
+              f"{len(baseline['cells'])} cells, probe messages exact, "
+              f"hit rate within ±{args.hit_rtol:.1%}")
+        return 0
     if baseline.get("kind") == "simspeed":
         failures = compare_simspeed(baseline, candidate,
                                     speedup_rtol=args.speedup_rtol,

@@ -550,3 +550,75 @@ def compare_simspeed(baseline: dict, candidate: dict, *,
                 "(the fused lax probe path lost its win over "
                 "lax_unfused)")
     return failures
+
+
+def _serving_cell_key(cell: dict) -> tuple:
+    return (cell["shards"], cell["mix"], cell["policy"])
+
+
+def compare_serving(baseline: dict, candidate: dict, *,
+                    hit_rtol: float = 0.005,
+                    latency_rtol: Optional[float] = None) -> List[str]:
+    """Regression gate for ``benchmarks.fig_serving_scale`` reports
+    (``kind == "serving"``); returns human-readable failure strings.
+
+    The serving engine is integer-deterministic on a seeded stream, so
+    the blocking checks are tight: per (shards x mix x policy) cell,
+    **probe-message counts gate exactly** (the paper's claim — ``ata``
+    must stay at zero, and a drifting ``broadcast`` count means the
+    probe accounting changed) and **hit rate** within ``hit_rtol``
+    (nominally exact too; the tolerance absorbs only the float
+    division). Modeled p99 latency is gated only when ``latency_rtol``
+    is given (it folds in NoC queue state and cost constants that
+    legitimately move with the cost model). Wall-clock throughput is
+    never gated — it is host-dependent and tracked by the nightly
+    trend instead. Also fails on kind/config mismatch, schema
+    downgrade, and missing cells.
+    """
+    for rep, who in ((baseline, "baseline"), (candidate, "candidate")):
+        if rep.get("kind") != "serving":
+            return [f"{who} is not a serving report "
+                    f"(kind={rep.get('kind')!r})"]
+    if candidate.get("schema", 0) < baseline.get("schema", 0):
+        return [f"schema downgrade: baseline {baseline.get('schema')} "
+                f"vs candidate {candidate.get('schema')}"]
+    for key, value in baseline["config"].items():
+        if candidate["config"].get(key) != value:
+            return [f"config mismatch — reports are not comparable: "
+                    f"baseline {baseline['config']} "
+                    f"vs candidate {candidate['config']}"]
+
+    failures: List[str] = []
+    cand_cells = {_serving_cell_key(c): c for c in candidate["cells"]}
+    for base_cell in baseline["cells"]:
+        key = _serving_cell_key(base_cell)
+        cell = cand_cells.get(key)
+        if cell is None:
+            failures.append(f"serving cell missing from candidate: {key}")
+            continue
+        if cell["probe_messages"] != base_cell["probe_messages"]:
+            failures.append(
+                f"probe-message count changed at {key}: "
+                f"{base_cell['probe_messages']} -> "
+                f"{cell['probe_messages']} (directory/probe accounting "
+                "drifted — the stream is seeded, this must be exact)")
+        if cell["requests"] != base_cell["requests"]:
+            failures.append(
+                f"request count changed at {key}: "
+                f"{base_cell['requests']} -> {cell['requests']} "
+                "(stream generation drifted under an identical config)")
+        base_v, cand_v = base_cell["hit_rate"], cell["hit_rate"]
+        drift = abs(cand_v - base_v) / max(abs(base_v), 1e-9)
+        if drift > hit_rtol:
+            failures.append(
+                f"hit-rate drift {drift:+.2%} beyond ±{hit_rtol:.1%} "
+                f"at {key}: {base_v:.4f} -> {cand_v:.4f}")
+        if latency_rtol is not None:
+            base_v, cand_v = base_cell["p99_latency"], cell["p99_latency"]
+            drift = abs(cand_v - base_v) / max(abs(base_v), 1e-9)
+            if drift > latency_rtol:
+                failures.append(
+                    f"p99-latency drift {drift:+.2%} beyond "
+                    f"±{latency_rtol:.0%} at {key}: "
+                    f"{base_v:.1f} -> {cand_v:.1f}")
+    return failures

@@ -1,22 +1,30 @@
 """Composable workload-trace layer.
 
-Split from the seed-era ``repro.core.workloads`` monolith (which now
-re-exports from here for backwards compatibility):
+Split from the seed-era ``repro.core.workloads`` monolith (shim
+removed in PR 7 — import from here):
 
   apps.py        the calibrated :class:`AppParams` table (data only)
   generators.py  :func:`make_trace` + kernel-parameter rules + the
                  int32 address guard
   mix.py         :class:`WorkloadMix` — multi-tenant composition with
                  per-app attribution (``Trace.core_app``)
+  serving.py     :class:`ServingMix` / :class:`RequestStream` — the
+                 multi-tenant request-stream generator feeding the
+                 serving engine (``repro.serving.engine``)
 """
 from repro.core.trace.apps import (APPS, HIGH_LOCALITY, LOW_LOCALITY,
                                    AppParams)
 from repro.core.trace.generators import (app_kernels, kernel_params,
                                          make_trace)
 from repro.core.trace.mix import APP_STRIDE, WorkloadMix
+from repro.core.trace.serving import (TENANT_STRIDE, TENANTS,
+                                      RequestStream, ServingMix,
+                                      TenantParams, tenant_stream)
 
 __all__ = [
     "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
     "app_kernels", "kernel_params", "make_trace",
     "APP_STRIDE", "WorkloadMix",
+    "TENANT_STRIDE", "TENANTS", "RequestStream", "ServingMix",
+    "TenantParams", "tenant_stream",
 ]

@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as T
-from repro.serving.ata_cache import (AtaCacheConfig, AtaPrefixCache,
-                                     hash_blocks, synth_requests)
+from repro.serving.ref import (AtaCacheConfig, AtaPrefixCache,
+                               hash_blocks, synth_requests)
 
 
 class ModelServer:

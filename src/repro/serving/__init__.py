@@ -1,3 +1,20 @@
-from repro.serving.ata_cache import (AtaCacheConfig, AtaPrefixCache,
-                                     POLICIES, Stats, hash_blocks,
-                                     run_workload, synth_requests)
+"""ATA-style serving: numpy oracle (ref) + vectorized engine (engine).
+
+``ref`` keeps the original one-request-at-a-time API (the oracle the
+engine is tested against bit-exactly); ``engine`` replays
+:class:`~repro.core.trace.serving.RequestStream` grids under
+``lax.scan`` at production request counts.
+"""
+from repro.serving.ref import (AtaCacheConfig, AtaPrefixCache, POLICIES,
+                               Stats, hash_blocks, run_stream,
+                               run_workload, synth_requests)
+from repro.serving.engine import (SERVING_POLICIES,
+                                  SERVING_PROBE_BACKENDS, ServeResult,
+                                  ServingConfig, serve_stream)
+
+__all__ = [
+    "AtaCacheConfig", "AtaPrefixCache", "POLICIES", "Stats",
+    "hash_blocks", "run_stream", "run_workload", "synth_requests",
+    "SERVING_POLICIES", "SERVING_PROBE_BACKENDS", "ServeResult",
+    "ServingConfig", "serve_stream",
+]

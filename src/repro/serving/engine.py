@@ -1,0 +1,364 @@
+"""Vectorized, jitted ATA serving engine.
+
+The production-scale replacement for the Python-loop oracle
+(``repro.serving.ref``): a :class:`~repro.core.trace.serving.
+RequestStream` grid — one admission slot per shard per round — is
+replayed by one ``lax.scan`` over rounds, so millions of requests run
+in vectorized steps with no per-request Python.
+
+Round semantics (the oracle's ``run_stream`` is the bit-exact
+reference):
+
+1. **Probe** — every arriving request compares its block chain against
+   the round-start replicated directory of all shards. Under ``ata``
+   this is the aggregated-tag-array compare the paper builds in
+   hardware; the ``ata_tag_probe`` Pallas kernel is a selectable
+   backend for it (``lax`` is the fused-XLA default, mirroring
+   ``repro.core.probe.PROBE_BACKENDS``).
+2. **Walk** — each request reuses its leading hits (prefix semantics);
+   reuse of an own-shard block is revalidated against the *live* local
+   directory (this shard's own replication inserts can evict a block
+   mid-walk), remote presence is vouched for by the probe (remote
+   shards never mutate each other's arrays — the local-write rule).
+   Under ``ata`` a remote hit replicates into the local directory
+   (paper Fig 7(a)); after the first failure all remaining blocks
+   recompute and seal locally.
+3. **Price** — remote fetches become :class:`~repro.core.noc.
+   NocTraffic` (``flits_per_block`` flits from owner to requester)
+   through a pluggable :class:`~repro.core.noc.NocModel` whose state
+   carries across rounds (crossbar backpressure works); per-request
+   latency folds hit/fetch/recompute terms, the broadcast policy's
+   probe round trip, and the NoC delay + occupancy.
+
+All shard updates within a round are disjoint (each shard writes only
+its own directory rows), so the parallel walk is order-free; counters
+are int32 in the scan carry (exact well past the f32 2^24 integer
+ceiling at millions of blocks).
+
+Policies: ``private`` (local-only), ``broadcast`` (probe all shards on
+local miss — the oracle's ``remote``), ``ata`` (replicated directory,
+zero probe messages). The oracle-only ``decoupled`` policy has no
+engine analog (its home hash needs int64).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import GpuGeometry
+from repro.core.noc import NocTraffic, get_noc, init_noc_state
+from repro.kernels.ata_tag_probe import ata_tag_probe
+
+SERVING_POLICIES = ("private", "broadcast", "ata")
+
+#: Directory-probe backends: fused XLA gather/compare (default), the
+#: ``ata_tag_probe`` Pallas kernel compiled by Mosaic (TPU), and the
+#: same kernel interpreted (validation off-TPU).
+SERVING_PROBE_BACKENDS = ("lax", "pallas", "pallas_interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Static engine configuration (hashable: one executable per value).
+
+    The directory mirrors :class:`~repro.serving.ref.AtaCacheConfig`
+    (``n_shards`` comes from the stream). Timing terms are abstract
+    serving cycles; the NoC scalars feed the
+    :class:`~repro.core.geometry.GpuGeometry` the interconnect models
+    price traffic with.
+    """
+    n_sets: int = 64
+    n_ways: int = 8
+    # --- latency model (cycles per block / per request) -------------
+    lat_hit: float = 1.0        # local pool read per block
+    lat_fetch: float = 4.0      # remote fetch base per block (+ NoC)
+    lat_recompute: float = 40.0  # prefill recompute per block
+    lat_probe_rtt: float = 6.0  # broadcast probe round trip per request
+    # --- interconnect ----------------------------------------------
+    flits_per_block: int = 4
+    noc: str = "ideal"
+    noc_bw: float = 16.0
+    # --- probe backend ---------------------------------------------
+    probe_backend: str = "lax"
+
+    def __post_init__(self):
+        if self.noc not in ("ideal", "crossbar", "ring"):
+            get_noc(self.noc)   # raises with the registered list
+        if self.probe_backend not in SERVING_PROBE_BACKENDS:
+            raise ValueError(
+                f"probe_backend must be one of {SERVING_PROBE_BACKENDS},"
+                f" got {self.probe_backend!r}")
+
+    def geometry(self, n_shards: int) -> GpuGeometry:
+        """The one-cluster geometry the NoC models price traffic with."""
+        return GpuGeometry(n_cores=n_shards, cluster_size=n_shards,
+                           l1_sets=self.n_sets, l1_ways=self.n_ways,
+                           flits_per_line=self.flits_per_block,
+                           noc_bw=self.noc_bw)
+
+
+class ServeResult(NamedTuple):
+    """Aggregate + per-round outputs of one engine replay."""
+    policy: str
+    n_requests: int
+    local_hits: int
+    remote_hits: int
+    recomputed_blocks: int
+    probe_messages: int
+    remote_fetch_blocks: int
+    directory_sync_entries: int
+    shard_load: np.ndarray          # (C,) reuse serves per shard
+    latency: np.ndarray             # (T, C) f32 modeled request latency
+    served: np.ndarray              # (T, C) bool request present
+    tenants: Tuple[str, ...]
+    tenant_requests: np.ndarray     # (n_tenants,)
+    tenant_hit_blocks: np.ndarray
+    tenant_blocks: np.ndarray
+    tenant_latency_sum: np.ndarray  # (n_tenants,) f32
+    cycles: float                   # sum of per-round critical paths
+    noc_injected: float
+    noc_delivered: float
+    noc_queued: float
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.local_hits + self.remote_hits + self.recomputed_blocks
+        return (self.local_hits + self.remote_hits) / max(tot, 1)
+
+    @property
+    def request_latencies(self) -> np.ndarray:
+        return self.latency[self.served]
+
+    def latency_percentile(self, q: float) -> float:
+        lat = self.request_latencies
+        return float(np.percentile(lat, q)) if lat.size else 0.0
+
+    @property
+    def p50_latency(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p99_latency(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def requests_per_kcycle(self) -> float:
+        """Modeled throughput (requests per 1000 modeled cycles)."""
+        return 1e3 * self.n_requests / max(self.cycles, 1e-9)
+
+    @property
+    def load_imbalance(self) -> float:
+        m = self.shard_load.mean()
+        return float(self.shard_load.max() / m) if m else 0.0
+
+
+def _probe_all(tags, valid, h, set_idx, *, backend):
+    """(C, K, C_dir) hits of every request block vs every directory.
+
+    Invalid block lanes carry hash 0, which never matches (sealed tags
+    are >= 1), so no masking is needed here.
+    """
+    C, K = h.shape
+    if backend == "lax":
+        g_t = tags[:, set_idx, :]                   # (C_dir, C, K, W)
+        g_v = valid[:, set_idx, :]
+        hits = ((g_t == h[None, :, :, None]) & g_v).any(-1)
+        return jnp.transpose(hits, (1, 2, 0))       # (C, K, C_dir)
+    R = C * K
+    bc = 8 if C % 8 == 0 else C
+    hits, _ = ata_tag_probe(
+        set_idx.reshape(R), h.reshape(R), tags, valid, br=R, bc=bc,
+        interpret=True if backend == "pallas_interpret" else None)
+    return hits.reshape(C, K, C)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "cfg", "n_tenants"))
+def _serve(valid_r, hashes, n_blocks, tenant, *, policy, cfg, n_tenants):
+    T, C, K = hashes.shape
+    S, W = cfg.n_sets, cfg.n_ways
+    geom = cfg.geometry(C)
+    noc = get_noc(cfg.noc)
+    cidx = jnp.arange(C, dtype=jnp.int32)
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    carry0 = dict(
+        tags=jnp.zeros((C, S, W), i32),
+        valid=jnp.zeros((C, S, W), jnp.bool_),
+        last=jnp.zeros((C, S, W), i32),
+        noc=init_noc_state(noc.n_links(geom)),
+        local_hits=i32(0), remote_hits=i32(0),
+        recomputed_blocks=i32(0), probe_messages=i32(0),
+        remote_fetch_blocks=i32(0), directory_sync_entries=i32(0),
+        shard_load=jnp.zeros((C,), i32),
+        tenant_requests=jnp.zeros((n_tenants,), i32),
+        tenant_hit_blocks=jnp.zeros((n_tenants,), i32),
+        tenant_blocks=jnp.zeros((n_tenants,), i32),
+        tenant_latency_sum=jnp.zeros((n_tenants,), f32),
+        cycles=f32(0.0),
+        t=i32(0),
+    )
+
+    def step(carry, x):
+        vr, h, nb, ten = x               # (C,), (C,K), (C,), (C,)
+        tags, valid, last = carry["tags"], carry["valid"], carry["last"]
+        clock = carry["t"] + 1
+        set_idx = (h % S).astype(i32)
+
+        hits = _probe_all(tags, valid, h, set_idx,
+                          backend=cfg.probe_backend)  # (C, K, C_dir)
+        karange = jnp.arange(K)
+        local_hit = hits[cidx[:, None], karange[None, :], cidx[:, None]]
+        bvalid = (karange[None, :] < nb[:, None]) & vr[:, None]
+        if policy == "private":
+            hit = local_hit
+            owner = jnp.broadcast_to(cidx[:, None], (C, K))
+        else:
+            hit = hits.any(-1)
+            owner = jnp.where(local_hit, cidx[:, None],
+                              jnp.argmax(hits, axis=-1).astype(i32))
+        pm = i32(0)
+        if policy == "broadcast":
+            # one broadcast per locally-missing block of the chain
+            pm = jnp.sum((bvalid & ~local_hit).astype(i32)) * (C - 1)
+
+        alive = vr
+        n_local = jnp.zeros((C,), i32)
+        n_remote = jnp.zeros((C,), i32)
+        n_recomp = jnp.zeros((C,), i32)
+        shard_load = carry["shard_load"]
+        block_src = []
+        block_remote = []
+        for k in range(K):               # static unroll over the chain
+            bv = bvalid[:, k]
+            hh, si = h[:, k], set_idx[:, k]
+            ow = owner[:, k]
+            row_t = tags[cidx, si]                       # (C, W)
+            row_v = valid[cidx, si]
+            row_l = last[cidx, si]
+            present_way = row_v & (row_t == hh[:, None])
+            present_self = present_way.any(-1)
+            # own-shard reuse revalidates live; remote is probe-vouched
+            ok = (ow != cidx) | present_self
+            reused = alive & bv & hit[:, k] & ok
+            recomp = bv & ~reused
+            alive = alive & (~bv | reused)
+            local = reused & (ow == cidx)
+            remote = reused & ~local
+            n_local += local
+            n_remote += remote
+            n_recomp += recomp
+            shard_load = shard_load.at[jnp.where(reused, ow, C)] \
+                .add(1, mode="drop")
+            do_insert = (recomp | remote) if policy == "ata" else recomp
+            has_free = (~row_v).any(-1)
+            way = jnp.where(
+                present_self, jnp.argmax(present_way, axis=-1),
+                jnp.where(has_free, jnp.argmax(~row_v, axis=-1),
+                          jnp.argmin(row_l, axis=-1))).astype(i32)
+            row_sel = jnp.where(do_insert, cidx, C)      # OOB -> drop
+            tags = tags.at[row_sel, si, way].set(hh, mode="drop")
+            valid = valid.at[row_sel, si, way].set(True, mode="drop")
+            last = last.at[row_sel, si, way].set(clock, mode="drop")
+            block_src.append(ow)
+            block_remote.append(remote)
+
+        # --- NoC pricing: one traffic entry per remote-fetched block
+        src = jnp.stack(block_src, axis=1).reshape(-1)   # (C*K,)
+        rmask = jnp.stack(block_remote, axis=1).reshape(-1)
+        traffic = NocTraffic(
+            src=src, dst=jnp.repeat(cidx, K),
+            cluster=jnp.zeros_like(src),
+            flits=jnp.full((C * K,), float(cfg.flits_per_block), f32),
+            mask=rmask)
+        transit = noc.transit(geom, carry["noc"], traffic)
+        noc_extra = (transit.delay + transit.occupancy) \
+            .reshape(C, K).sum(-1)
+
+        lat = (cfg.lat_hit * n_local + cfg.lat_fetch * n_remote
+               + cfg.lat_recompute * n_recomp).astype(f32) + noc_extra
+        if policy == "broadcast":
+            lat += cfg.lat_probe_rtt \
+                * (bvalid & ~local_hit).any(-1).astype(f32)
+        lat = jnp.where(vr, lat, 0.0)
+
+        tidx = jnp.where(vr, ten, n_tenants)             # OOB -> drop
+        new = dict(
+            carry,
+            tags=tags, valid=valid, last=last, noc=transit.state,
+            local_hits=carry["local_hits"] + n_local.sum(),
+            remote_hits=carry["remote_hits"] + n_remote.sum(),
+            recomputed_blocks=carry["recomputed_blocks"]
+            + n_recomp.sum(),
+            probe_messages=carry["probe_messages"] + pm,
+            remote_fetch_blocks=carry["remote_fetch_blocks"]
+            + n_remote.sum(),
+            directory_sync_entries=carry["directory_sync_entries"]
+            + (n_recomp.sum() if policy == "ata" else i32(0)),
+            shard_load=shard_load,
+            tenant_requests=carry["tenant_requests"].at[tidx]
+            .add(1, mode="drop"),
+            tenant_hit_blocks=carry["tenant_hit_blocks"].at[tidx]
+            .add(n_local + n_remote, mode="drop"),
+            tenant_blocks=carry["tenant_blocks"].at[tidx]
+            .add(n_local + n_remote + n_recomp, mode="drop"),
+            tenant_latency_sum=carry["tenant_latency_sum"].at[tidx]
+            .add(lat, mode="drop"),
+            cycles=carry["cycles"] + jnp.max(lat),
+            t=clock,
+        )
+        return new, (lat, vr)
+
+    final, (lat, served) = jax.lax.scan(
+        step, carry0, (valid_r, hashes, n_blocks, tenant))
+    return final, lat, served
+
+
+def serve_stream(policy: str, stream,
+                 cfg: ServingConfig = ServingConfig()) -> ServeResult:
+    """Replay ``stream`` under ``policy``; returns a :class:`ServeResult`.
+
+    ``stream`` is a :class:`~repro.core.trace.serving.RequestStream`
+    (build one with :class:`~repro.core.trace.serving.ServingMix`).
+    """
+    if policy not in SERVING_POLICIES:
+        raise ValueError(f"policy must be one of {SERVING_POLICIES}, "
+                         f"got {policy!r}")
+    final, lat, served = _serve(
+        jnp.asarray(stream.valid), jnp.asarray(stream.hashes),
+        jnp.asarray(stream.n_blocks), jnp.asarray(stream.tenant),
+        policy=policy, cfg=cfg, n_tenants=stream.n_tenants)
+    nstate = final["noc"]
+    return ServeResult(
+        policy=policy,
+        n_requests=stream.n_requests,
+        local_hits=int(final["local_hits"]),
+        remote_hits=int(final["remote_hits"]),
+        recomputed_blocks=int(final["recomputed_blocks"]),
+        probe_messages=int(final["probe_messages"]),
+        remote_fetch_blocks=int(final["remote_fetch_blocks"]),
+        directory_sync_entries=int(final["directory_sync_entries"]),
+        shard_load=np.asarray(final["shard_load"]),
+        latency=np.asarray(lat),
+        served=np.asarray(served),
+        tenants=stream.tenants,
+        tenant_requests=np.asarray(final["tenant_requests"]),
+        tenant_hit_blocks=np.asarray(final["tenant_hit_blocks"]),
+        tenant_blocks=np.asarray(final["tenant_blocks"]),
+        tenant_latency_sum=np.asarray(final["tenant_latency_sum"]),
+        cycles=float(final["cycles"]),
+        noc_injected=float(nstate["injected"]),
+        noc_delivered=float(nstate["delivered"]),
+        noc_queued=float(nstate["queue"].sum()),
+    )
+
+
+def compile_count() -> int:
+    """Engine executables compiled so far (CI budgets this)."""
+    return int(_serve._cache_size())

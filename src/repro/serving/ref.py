@@ -1,4 +1,9 @@
-"""ATA-style distributed KV-prefix cache for multi-shard LM serving.
+"""Reference (numpy) ATA-style distributed KV-prefix cache.
+
+This is the original Python-loop model, retained as the **oracle** for
+the vectorized engine (``repro.serving.engine``): the engine's
+hit/probe/fetch accounting must match this implementation bit-exactly
+on small workloads (tier-1 tested) before any scale claim counts.
 
 The paper's mechanism mapped onto serving (DESIGN.md §3):
 
@@ -23,6 +28,21 @@ Baselines for the paper's Table-I landscape, same API:
   decoupled — blocks hash-home to exactly one shard (hot-shard load
               concentration counted; no replication)
   ata       — the paper's design
+
+Two request paths share the walk/insert machinery:
+
+* :meth:`AtaPrefixCache.lookup_prefix` — the legacy one-request-at-a-
+  time path (token arrays in, payloads out), unchanged semantics;
+* :func:`run_stream` — the **round-based** reference over a
+  :class:`~repro.core.trace.serving.RequestStream` grid: each round,
+  all arriving requests probe the round-start directory, then apply
+  their walks. The local-write rule makes per-shard updates disjoint,
+  so apply order cannot matter — which is exactly what lets the
+  vectorized engine replay rounds in parallel. Remote payload presence
+  is vouched for by the round-start probe (the fetch snapshots remote
+  data at probe resolution); only *local* presence is revalidated
+  live, because a shard's own replication inserts can evict a block
+  its own walk planned to reuse.
 
 The pools/directory are modeled at block granularity with opaque
 payload ids; `examples/serve_ata.py` wires it to real model KV blocks.
@@ -153,30 +173,41 @@ class AtaPrefixCache:
         self.pool_used[shard] += 1
 
     # -- request path ---------------------------------------------------------
-    def lookup_prefix(self, shard: int, tokens: np.ndarray
-                      ) -> Tuple[int, List[object]]:
-        """Longest reusable prefix for a request arriving at `shard`.
+    def probe_blocks(self, shard: int, hashes: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-policy probe for one request's block chain -> (hit, owner).
 
-        Returns (#reused blocks, payloads). Misses past the first gap
-        stop reuse (prefix semantics). Updates stats per policy.
+        The ``remote`` policy's probe-message accounting happens here
+        (at probe time, one broadcast per locally-missing block),
+        exactly as in the pre-split ``lookup_prefix``.
         """
-        self.clock += 1
-        cfg = self.cfg
-        hashes = hash_blocks(tokens, cfg.block_tokens)
-        st = self.stats
-
         if self.policy == "private":
-            hit, owner = self.probe(shard, hashes, "local")
-        elif self.policy == "decoupled":
-            hit, owner = self.probe(shard, hashes, "home")
-        elif self.policy == "remote":
-            lhit, lown = self.probe(shard, hashes, "local")
-            hit, owner = self.probe(shard, hashes, "all")
-            # probe broadcast for every locally-missing block
-            st.probe_messages += int((~lhit).sum()) * (cfg.n_shards - 1)
-        else:  # ata: replicated directory, local parallel compare
-            hit, owner = self.probe(shard, hashes, "all")
+            return self.probe(shard, hashes, "local")
+        if self.policy == "decoupled":
+            return self.probe(shard, hashes, "home")
+        if self.policy == "remote":
+            lhit, _ = self.probe(shard, hashes, "local")
+            self.stats.probe_messages += int((~lhit).sum()) \
+                * (self.cfg.n_shards - 1)
+            return self.probe(shard, hashes, "all")
+        # ata: replicated directory, local parallel compare
+        return self.probe(shard, hashes, "all")
 
+    def apply_blocks(self, shard: int, hashes: np.ndarray,
+                     hit: np.ndarray, owner: np.ndarray
+                     ) -> Tuple[int, List[object]]:
+        """Walk one request's chain against a prior probe result.
+
+        Reuses leading hits (prefix semantics: the first failure stops
+        reuse), then recomputes + seals the rest per the policy's
+        write rule. Remote presence is vouched for by the probe (the
+        fetch snapshots the remote pool at probe resolution; remote
+        shards only ever mutate their *own* arrays, so within a
+        sequential lookup this is identical to the historical live
+        check). Local presence is revalidated live — this shard's own
+        replication inserts may have evicted a block the probe saw.
+        """
+        st = self.stats
         payloads: List[object] = []
         reused = 0
         for i, h in enumerate(hashes):
@@ -184,8 +215,10 @@ class AtaPrefixCache:
                 break
             src = int(owner[i])
             payload = self.pool_payload[src].get(int(h))
-            if payload is None:
+            if src == shard and payload is None:
                 break
+            if payload is None:                 # remote: probe vouches
+                payload = ("blk", int(h))
             payloads.append(payload)
             reused += 1
             st.shard_load[src] += 1
@@ -203,12 +236,24 @@ class AtaPrefixCache:
         # recompute the rest; seal new blocks per policy's write rule
         for i in range(reused, len(hashes)):
             st.recomputed_blocks += 1
-            home = (_home(hashes[i], cfg.n_shards)
+            home = (_home(hashes[i], self.cfg.n_shards)
                     if self.policy == "decoupled" else shard)
             if self.policy == "ata":
                 st.directory_sync_entries += 1   # delta all-gather entry
             self.insert(home, int(hashes[i]), ("blk", int(hashes[i])))
         return reused, payloads
+
+    def lookup_prefix(self, shard: int, tokens: np.ndarray
+                      ) -> Tuple[int, List[object]]:
+        """Longest reusable prefix for a request arriving at `shard`.
+
+        Returns (#reused blocks, payloads). Misses past the first gap
+        stop reuse (prefix semantics). Updates stats per policy.
+        """
+        self.clock += 1
+        hashes = hash_blocks(tokens, self.cfg.block_tokens)
+        hit, owner = self.probe_blocks(shard, hashes)
+        return self.apply_blocks(shard, hashes, hit, owner)
 
 
 def run_workload(policy: str, cfg: AtaCacheConfig, requests,
@@ -217,6 +262,44 @@ def run_workload(policy: str, cfg: AtaCacheConfig, requests,
     cache = AtaPrefixCache(cfg, policy)
     for shard, toks in requests:
         cache.lookup_prefix(int(shard), np.asarray(toks))
+    if cache.block_load:
+        cache.stats.hot_block_load = max(cache.block_load.values())
+    return cache.stats
+
+
+def run_stream(policy: str, cfg: AtaCacheConfig, stream) -> Stats:
+    """Round-based oracle over a ``RequestStream`` grid.
+
+    The reference semantics the vectorized engine must reproduce
+    bit-exactly: each round, every arriving request probes the
+    round-start directory (all probes before any apply); then every
+    request applies its walk. The local-write rule makes the applies
+    disjoint per shard, so their order is irrelevant. The clock ticks
+    once per *round* (LRU timestamps are round-granular).
+
+    ``policy`` accepts the engine's name ``"broadcast"`` as an alias
+    for the legacy ``"remote"``; ``"decoupled"`` stays a
+    ``lookup_prefix``-only policy (its int64 home hash has no int32
+    engine analog).
+    """
+    policy = {"broadcast": "remote"}.get(policy, policy)
+    if policy not in ("private", "remote", "ata"):
+        raise ValueError(f"run_stream supports private/broadcast/ata, "
+                         f"got {policy!r}")
+    cfg = dataclasses.replace(cfg, n_shards=stream.n_shards)
+    cache = AtaPrefixCache(cfg, policy)
+    T, C = stream.rounds, stream.n_shards
+    for t in range(T):
+        cache.clock += 1
+        probes = []
+        for c in range(C):
+            if not stream.valid[t, c]:
+                continue
+            hashes = stream.hashes[t, c, :int(stream.n_blocks[t, c])] \
+                .astype(np.int64)
+            probes.append((c, hashes) + cache.probe_blocks(c, hashes))
+        for c, hashes, hit, owner in probes:
+            cache.apply_blocks(c, hashes, hit, owner)
     if cache.block_load:
         cache.stats.hot_block_load = max(cache.block_load.values())
     return cache.stats

@@ -362,3 +362,27 @@ def test_hash_blocks_prefix_property(tokens, cut):
     np.testing.assert_array_equal(h1[:cut_block], h2[:cut_block])
     if len(h1) > cut_block:
         assert (h1[cut_block:] != h2[cut_block:]).all()
+
+
+# ---------------------------------------------------------------------------
+# serving request streams: mix superposition
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(("chat", "rag", "batch")),
+       st.integers(2, 6), st.integers(8, 48), st.integers(0, 1000))
+def test_one_tenant_mix_equals_solo_stream(tenant, n_shards, rounds,
+                                           seed):
+    """A ``ServingMix`` of one tenant IS that tenant's solo stream —
+    superposition adds nothing when there is nothing to superpose
+    (slot 0 applies no hash-space offset, no contention to arbitrate),
+    so the engine replays both identically by construction."""
+    from repro.core.trace.serving import ServingMix, tenant_stream
+    solo = tenant_stream(tenant, n_shards=n_shards, rounds=rounds,
+                         seed=seed, slot=0)
+    mix = ServingMix((tenant,)).make_stream(n_shards=n_shards,
+                                            rounds=rounds, seed=seed)
+    assert mix.tenants == (tenant,)
+    np.testing.assert_array_equal(mix.valid, solo.valid)
+    np.testing.assert_array_equal(mix.hashes, solo.hashes)
+    np.testing.assert_array_equal(mix.n_blocks, solo.n_blocks)
+    np.testing.assert_array_equal(mix.tenant, solo.tenant)

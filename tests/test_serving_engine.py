@@ -1,0 +1,309 @@
+"""Vectorized serving engine vs the retained numpy oracle.
+
+The contract is *bit-exactness*: ``repro.serving.engine.serve_stream``
+must reproduce the oracle's hit/probe/fetch accounting integer-for-
+integer on the same :class:`~repro.core.trace.serving.RequestStream`,
+for every serving policy, both on packed multi-request rounds and on
+the sequentialized stream (one request per round — where round
+semantics degenerate to the oracle's original one-at-a-time order).
+On top of that: conservation invariants, probe-message bounds, probe-
+backend equivalence, NoC pricing conservation, per-tenant attribution,
+compile-count bounds, and the ``compare_serving`` regression gate.
+"""
+import numpy as np
+import pytest
+
+from repro.core.trace.serving import ServingMix, tenant_stream
+from repro.serving import (SERVING_POLICIES, ServingConfig, engine, ref,
+                           serve_stream)
+
+N_SHARDS = 4
+ROUNDS = 64
+
+
+@pytest.fixture(scope="module")
+def stream():
+    # chat+batch: high- and low-sharing tenants with bursty arrivals,
+    # past the cold-start transient at 4 shards x 64 rounds
+    return ServingMix(("chat", "batch")).make_stream(
+        n_shards=N_SHARDS, rounds=ROUNDS, seed=1)
+
+
+@pytest.fixture(scope="module")
+def results(stream):
+    return {p: serve_stream(p, stream) for p in SERVING_POLICIES}
+
+
+@pytest.fixture(scope="module")
+def oracle(stream):
+    return {p: ref.run_stream(p, ref.AtaCacheConfig(), stream)
+            for p in SERVING_POLICIES}
+
+
+def _assert_matches(res, st):
+    assert res.local_hits == st.local_hits
+    assert res.remote_hits == st.remote_hits
+    assert res.recomputed_blocks == st.recomputed_blocks
+    assert res.probe_messages == st.probe_messages
+    assert res.remote_fetch_blocks == st.remote_fetch_blocks
+    assert res.directory_sync_entries == st.directory_sync_entries
+    np.testing.assert_array_equal(res.shard_load, st.shard_load)
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", SERVING_POLICIES)
+def test_engine_matches_oracle_packed(results, oracle, policy):
+    """Full rounds (up to one request per shard) — bit-exact."""
+    _assert_matches(results[policy], oracle[policy])
+
+
+@pytest.mark.parametrize("policy", SERVING_POLICIES)
+def test_engine_matches_oracle_sequential(stream, policy):
+    """One request per round: the oracle's original sequential order."""
+    seq = stream.sequential()
+    res = serve_stream(policy, seq)
+    st = ref.run_stream(policy, ref.AtaCacheConfig(), seq)
+    _assert_matches(res, st)
+    # and sequentialization preserves the request population exactly
+    assert seq.n_requests == stream.n_requests
+
+
+def test_oracle_broadcast_is_legacy_remote(stream):
+    """`broadcast` is the legacy oracle's `remote` policy by alias."""
+    a = ref.run_stream("broadcast", ref.AtaCacheConfig(), stream)
+    b = ref.run_stream("remote", ref.AtaCacheConfig(), stream)
+    assert (a.local_hits, a.remote_hits, a.probe_messages) \
+        == (b.local_hits, b.remote_hits, b.probe_messages)
+
+
+def test_oracle_rejects_engineless_policies(stream):
+    with pytest.raises(ValueError):
+        ref.run_stream("decoupled", ref.AtaCacheConfig(), stream)
+    with pytest.raises(ValueError):
+        serve_stream("decoupled", stream)
+
+
+# ---------------------------------------------------------------------------
+# conservation + bounds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", SERVING_POLICIES)
+def test_block_conservation(stream, results, policy):
+    """Every valid block is served exactly once: hit or recomputed."""
+    res = results[policy]
+    total_blocks = int(stream.n_blocks[stream.valid].sum())
+    assert (res.local_hits + res.remote_hits + res.recomputed_blocks
+            == total_blocks)
+    assert res.n_requests == stream.n_requests
+    assert int(res.served.sum()) == stream.n_requests
+
+
+def test_probe_message_bounds(stream, results):
+    """private/ata never probe; broadcast probes <= blocks x (C-1)."""
+    assert results["private"].probe_messages == 0
+    assert results["ata"].probe_messages == 0
+    total_blocks = int(stream.n_blocks[stream.valid].sum())
+    bcast = results["broadcast"].probe_messages
+    assert 0 < bcast <= total_blocks * (N_SHARDS - 1)
+
+
+def test_ata_replicates_and_syncs(results):
+    """ata fetches remotely and fills locally (Fig 7a); every newly
+    sealed block is a directory delta all-gather entry; broadcast
+    probes instead of syncing."""
+    ata = results["ata"]
+    assert ata.remote_fetch_blocks > 0
+    assert ata.directory_sync_entries == ata.recomputed_blocks
+    assert results["broadcast"].directory_sync_entries == 0
+    assert results["private"].remote_fetch_blocks == 0
+
+
+def test_hit_rate_ordering(results):
+    """Sharing beats private; zero-cost visibility beats probing."""
+    assert results["ata"].hit_rate >= results["broadcast"].hit_rate - 1e-9
+    assert results["broadcast"].hit_rate > results["private"].hit_rate
+
+
+# ---------------------------------------------------------------------------
+# probe backends
+# ---------------------------------------------------------------------------
+def test_pallas_interpret_backend_matches_lax(stream, results):
+    cfg = ServingConfig(probe_backend="pallas_interpret")
+    res = serve_stream("ata", stream, cfg)
+    _assert_matches(res, ref.run_stream("ata", ref.AtaCacheConfig(),
+                                        stream))
+    np.testing.assert_array_equal(res.latency, results["ata"].latency)
+
+
+def test_bad_probe_backend_rejected():
+    with pytest.raises(ValueError):
+        ServingConfig(probe_backend="mosaic?")
+
+
+# ---------------------------------------------------------------------------
+# NoC pricing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("noc", ("ideal", "crossbar", "ring"))
+def test_noc_conservation_and_counter_stability(stream, results, noc):
+    """Flit conservation holds per model, and pricing never perturbs
+    the integer accounting (latency-only coupling)."""
+    res = serve_stream("ata", stream, ServingConfig(noc=noc))
+    assert res.noc_injected == pytest.approx(
+        res.noc_delivered + res.noc_queued)
+    assert res.noc_injected > 0          # remote fetches really priced
+    _assert_matches(res, ref.run_stream("ata", ref.AtaCacheConfig(),
+                                        stream))
+    np.testing.assert_array_equal(res.served, results["ata"].served)
+
+
+def test_ring_costs_more_latency_than_ideal(stream):
+    """Hop distance adds delay on every remote fetch, so total modeled
+    latency is strictly larger whenever remote traffic exists."""
+    ideal = serve_stream("ata", stream, ServingConfig(noc="ideal"))
+    ring = serve_stream("ata", stream, ServingConfig(noc="ring"))
+    assert ideal.remote_fetch_blocks > 0
+    assert float(ring.latency.sum()) > float(ideal.latency.sum())
+
+
+# ---------------------------------------------------------------------------
+# per-tenant attribution
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", SERVING_POLICIES)
+def test_tenant_attribution_sums_to_totals(stream, results, policy):
+    res = results[policy]
+    assert res.tenants == stream.tenants
+    assert int(res.tenant_requests.sum()) == stream.n_requests
+    assert int(res.tenant_blocks.sum()) \
+        == int(stream.n_blocks[stream.valid].sum())
+    assert int(res.tenant_hit_blocks.sum()) \
+        == res.local_hits + res.remote_hits
+    assert float(res.tenant_latency_sum.sum()) \
+        == pytest.approx(float(res.latency.sum()), rel=1e-5)
+
+
+def test_chat_outhits_batch_under_ata(results):
+    """The high-sharing tenant reuses more of its blocks."""
+    res = results["ata"]
+    chat, batch = (res.tenant_hit_blocks / np.maximum(res.tenant_blocks,
+                                                      1))
+    assert chat > batch
+
+
+# ---------------------------------------------------------------------------
+# stream generator
+# ---------------------------------------------------------------------------
+def test_tenant_slots_are_hash_disjoint():
+    """Slot striding keeps tenants in disjoint hash sub-spaces."""
+    a = tenant_stream("chat", n_shards=4, rounds=32, seed=7, slot=0)
+    b = tenant_stream("chat", n_shards=4, rounds=32, seed=7, slot=1)
+    ha = set(np.unique(a.hashes[a.valid])) - {0}
+    hb = set(np.unique(b.hashes[b.valid])) - {0}
+    assert ha and hb and not (ha & hb)
+
+
+def test_one_tenant_mix_is_the_solo_stream():
+    """Deterministic twin of the hypothesis property: a 1-tenant mix
+    carries exactly the solo tenant's arrays (slot 0, no offset)."""
+    solo = tenant_stream("rag", n_shards=4, rounds=48, seed=5, slot=0)
+    mix = ServingMix(("rag",)).make_stream(n_shards=4, rounds=48, seed=5)
+    np.testing.assert_array_equal(mix.valid, solo.valid)
+    np.testing.assert_array_equal(mix.hashes, solo.hashes)
+    np.testing.assert_array_equal(mix.n_blocks, solo.n_blocks)
+
+
+def test_burst_and_diurnal_modulate_arrivals():
+    """batch's bursts push arrivals above its base rate in some rounds;
+    rag's diurnal swing makes round occupancy non-uniform."""
+    batch = tenant_stream("batch", n_shards=8, rounds=512, seed=0)
+    from repro.core.trace.serving import TENANTS
+    base = TENANTS["batch"].rate
+    # bursts multiply the arrival rate for whole windows, so mean
+    # occupancy sits well above the base rate a burst-free stream
+    # would fluctuate around
+    assert batch.valid.mean() > base + 0.1
+    rag = tenant_stream("rag", n_shards=8, rounds=4096, seed=0)
+    half = rag.valid.sum() // 2
+    first = rag.valid[:2048].sum()
+    assert abs(int(first) - int(half)) > 64   # phase asymmetry
+
+
+# ---------------------------------------------------------------------------
+# compile budget
+# ---------------------------------------------------------------------------
+def test_one_executable_per_policy(stream):
+    """The scan jits once per (policy, stream shape, config)."""
+    before = engine.compile_count()
+    small = ServingMix(("chat",)).make_stream(n_shards=2, rounds=16)
+    for _ in range(3):
+        for p in SERVING_POLICIES:
+            serve_stream(p, small)
+    assert engine.compile_count() - before <= len(SERVING_POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# the regression gate
+# ---------------------------------------------------------------------------
+def _serving_report(**over):
+    cell = {"shards": 4, "mix": "chat+batch", "policy": "ata",
+            "requests": 1000, "hit_rate": 0.4, "probe_messages": 0,
+            "p99_latency": 500.0}
+    cell.update(over)
+    return {"kind": "serving", "schema": 1,
+            "config": {"shards": [4], "rounds": 64},
+            "cells": [cell], "headline": {}}
+
+
+def test_compare_serving_identity_and_drift():
+    from repro.core.report import compare_serving
+    base = _serving_report()
+    assert compare_serving(base, base) == []
+    # probe messages gate exactly — off by one fails
+    fails = compare_serving(base, _serving_report(probe_messages=1))
+    assert any("probe-message" in f for f in fails)
+    # hit rate within tolerance passes, beyond fails (both directions)
+    assert compare_serving(base,
+                           _serving_report(hit_rate=0.4001)) == []
+    fails = compare_serving(base, _serving_report(hit_rate=0.45))
+    assert any("hit-rate" in f for f in fails)
+    # request-count drift means the stream itself changed
+    fails = compare_serving(base, _serving_report(requests=999))
+    assert any("request count" in f for f in fails)
+
+
+def test_compare_serving_structural_failures():
+    from repro.core.report import compare_serving
+    base = _serving_report()
+    missing = dict(base, cells=[])
+    assert any("missing" in f for f in compare_serving(base, missing))
+    other_cfg = dict(base, config={"shards": [8], "rounds": 64})
+    assert any("config mismatch" in f
+               for f in compare_serving(base, other_cfg))
+    not_serving = dict(base, kind="simspeed")
+    assert any("not a serving report" in f
+               for f in compare_serving(base, not_serving))
+    # p99 is gated only on opt-in
+    moved = _serving_report(p99_latency=900.0)
+    assert compare_serving(base, moved) == []
+    fails = compare_serving(base, moved, latency_rtol=0.25)
+    assert any("p99" in f for f in fails)
+
+
+def test_fig_serving_scale_report_shape(tmp_path):
+    """The benchmark emits a gate-compatible kind=serving report."""
+    from benchmarks import fig_serving_scale
+    from repro.core.report import compare_serving
+    mix = ServingMix(("chat", "batch"))
+    out = tmp_path / "serving.json"
+    rep = fig_serving_scale.run(rounds=ROUNDS, shards=(N_SHARDS,),
+                                mixes=(mix,), seed=1,
+                                out_json=str(out))
+    assert out.exists()
+    assert rep["kind"] == "serving"
+    assert len(rep["cells"]) == len(SERVING_POLICIES)
+    assert compare_serving(rep, rep) == []
+    assert rep["headline"]["probes_filtered"] > 0
+    # cells reproduce the module fixtures (same stream, same engine)
+    by_pol = {c["policy"]: c for c in rep["cells"]}
+    assert by_pol["ata"]["probe_messages"] == 0
+    assert by_pol["broadcast"]["probe_messages"] > 0

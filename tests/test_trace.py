@@ -20,25 +20,11 @@ def _small(app, rounds=192):
 
 
 # ---------------------------------------------------------------------------
-# the workloads.py -> trace/ split: old imports keep working
+# the workloads.py shim is gone (deprecated in PR 4, removed in PR 7)
 # ---------------------------------------------------------------------------
-def test_workloads_shim_reexports_trace_package():
-    import importlib
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.core import workloads
-    from repro.core import trace as trace_pkg
-    assert workloads.APPS is trace_pkg.APPS
-    assert workloads.make_trace is trace_pkg.make_trace
-    assert workloads.AppParams is trace_pkg.AppParams
-    # test-visible private names (used by pre-split tests) survive too
-    assert workloads._require_int32 is generators._require_int32
-    assert workloads._kernel_params is generators._jittered_params
-    # the shim is deprecated: importing it must say so (reload so the
-    # module-level warning fires even if the shim was imported earlier)
-    with pytest.warns(DeprecationWarning, match="repro.core.trace"):
-        importlib.reload(workloads)
+def test_workloads_shim_removed():
+    with pytest.raises(ImportError):
+        from repro.core import workloads  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

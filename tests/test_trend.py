@@ -115,6 +115,45 @@ def test_simspeed_reports_join_the_series(tmp_path):
     assert all(not r["flagged"] for r in rows)
 
 
+def _serving(hit, p99, rps):
+    return {
+        "kind": "serving", "schema": 1,
+        "config": {"shards": [8], "rounds": 512},
+        "cells": [{"shards": 8, "mix": "chat+rag", "policy": "ata",
+                   "requests": 4000, "hit_rate": hit,
+                   "probe_messages": 0, "p99_latency": p99,
+                   "throughput_rps": rps}],
+        "headline": {"probes_filtered": 1000},
+    }
+
+
+def test_serving_reports_join_the_series(tmp_path):
+    """Serving-engine reports ride the same history: per
+    (shards x mix x policy) cell, hit rate + p99 + throughput series."""
+    d = tmp_path / "bench_history"
+    d.mkdir()
+    (d / "2026-08-08_serving.json").write_text(
+        json.dumps(_serving(0.41, 720.0, 50e3)))
+    (d / "2026-08-09_serving.json").write_text(
+        json.dumps(_serving(0.41, 726.0, 61e3)))
+    (d / "2026-08-09.json").write_text(json.dumps(_report(20.0)))
+    series = bench_trend._cell_series(bench_trend.load_history(str(d)))
+    key = ("serving", 8, "chat+rag", "ata", "hit_rate")
+    assert [v for _, v in series[key]] == [0.41, 0.41]
+    assert ("serving", 8, "chat+rag", "ata", "p99_latency") in series
+    rps = series[("serving", 8, "chat+rag", "ata", "throughput_rps")]
+    assert [v for _, v in rps] == [50e3, 61e3]
+    # sensitivity reports still parse alongside
+    assert ("solo", "ata", "noc_bw", 16.0, "ipc") in series
+    rows = bench_trend.trend_rows(series, rtol=0.05)
+    by_key = {r["key"]: r for r in rows}
+    assert not by_key[("serving", 8, "chat+rag", "ata", "hit_rate")
+                      ]["flagged"]
+    # host throughput may drift beyond rtol — informational by design
+    assert by_key[("serving", 8, "chat+rag", "ata", "throughput_rps")
+                  ]["flagged"]
+
+
 def test_cli_writes_outputs_and_strict_gates(history, tmp_path):
     md = str(tmp_path / "trend.md")
     csv = str(tmp_path / "trend.csv")
