@@ -29,8 +29,10 @@ throughput reports (``benchmarks.sim_speed``, ``"kind": "simspeed"``)
 ride the same history directory: their per-backend rounds/sec and the
 fused-speedup ratio become ``simspeed`` series rows. Serving-engine
 reports (``benchmarks.fig_serving_scale``, ``"kind": "serving"``)
-likewise: per (shards x mix x policy) cell, hit rate, modeled p99
-latency, and host replay throughput become ``serving`` series rows.
+likewise: per (shards x mix x policy x slots) cell, hit rate, modeled
+p99 latency, and host replay throughput become ``serving`` series
+rows, and the batched-admission req/s-ratio headlines (modeled +
+wall, B=max vs B=1) get their own series.
 """
 import argparse
 import json
@@ -65,14 +67,24 @@ def _cell_series(reports: List[Tuple[str, dict]]
         if rep.get("kind") == "serving":
             # serving-engine reports: deterministic quality metrics
             # (hit rate, modeled p99) + host-dependent replay
-            # throughput, per (shards x mix x policy) cell
+            # throughput, per (shards x mix x policy x slots) cell
+            # (pre-batching reports carry no "slots" key: B=1), plus
+            # the machine-portable batched req/s-ratio headline
             for c in rep.get("cells", ()):
-                key = (c["shards"], c["mix"], c["policy"])
+                key = (c["shards"], c["mix"], c["policy"],
+                       c.get("slots", 1))
                 add(run, "serving", key, "hit_rate", c["hit_rate"])
                 add(run, "serving", key, "p99_latency",
                     c["p99_latency"])
                 add(run, "serving", key, "throughput_rps",
                     c["throughput_rps"])
+            head = rep.get("headline", {})
+            b = head.get("batched_slots")
+            for metric in ("batched_model_speedup",
+                           "batched_wall_speedup"):
+                if head.get(metric) is not None:
+                    add(run, "serving", (f"B{b}/B1",), metric,
+                        head[metric])
             continue
         for c in rep.get("cells", ()):
             add(run, "solo", (c["arch"], c["knob"], c["value"]), "ipc",

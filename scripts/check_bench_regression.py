@@ -31,14 +31,20 @@ one-sided) rather than host-dependent absolute rounds/sec
 
 Serving-engine reports (``benchmarks.fig_serving_scale``,
 ``"kind": "serving"``) dispatch to
-``repro.core.report.compare_serving``: per (shards x mix x policy)
-cell, probe-message counts gate *exactly* (the stream is seeded and
-the engine integer-deterministic) and hit rate within ``--hit-rtol``;
-host-dependent replay throughput is never gated:
+``repro.core.report.compare_serving``: per
+(shards x mix x policy x slots) cell, probe-message counts gate
+*exactly* (the stream is seeded and the engine integer-deterministic)
+and hit rate within ``--hit-rtol``; the batched-admission headline —
+worst-cell modeled requests-per-kcycle ratio, B=max vs B=1 — gates
+one-sided against both the absolute >= 1.5x acceptance floor and the
+baseline ratio minus ``--batched-rtol`` (the ratio is deterministic,
+hence machine-portable like the simspeed speedup gate);
+host-dependent replay throughput is never gated per cell, and the
+wall-clock batched ratio only with the opt-in ``--wall-rtol``:
 
     PYTHONPATH=src python scripts/check_bench_regression.py \
         benchmarks/baselines/serving_rounds512.json \
-        BENCH_serving.json [--hit-rtol 0.005]
+        BENCH_serving.json [--hit-rtol 0.005] [--batched-rtol 0.15]
 
 To update the baseline after an *intentional* performance or model
 change, regenerate it with the same configuration CI uses and commit:
@@ -77,6 +83,13 @@ def main() -> int:
     ap.add_argument("--latency-rtol", type=float, default=None,
                     help="gate modeled p99 latency too (serving; off "
                     "by default — moves with the cost model)")
+    ap.add_argument("--batched-rtol", type=float, default=0.15,
+                    help="allowed one-sided batched modeled-speedup "
+                    "drop vs baseline (serving; the absolute 1.5x "
+                    "floor always applies; default 15%%)")
+    ap.add_argument("--wall-rtol", type=float, default=None,
+                    help="gate the batched wall-clock speedup ratio "
+                    "too (serving; off by default — host-dependent)")
     args = ap.parse_args()
 
     baseline = load_report(args.baseline)
@@ -84,7 +97,9 @@ def main() -> int:
     if baseline.get("kind") == "serving":
         failures = compare_serving(baseline, candidate,
                                    hit_rtol=args.hit_rtol,
-                                   latency_rtol=args.latency_rtol)
+                                   latency_rtol=args.latency_rtol,
+                                   batched_rtol=args.batched_rtol,
+                                   wall_rtol=args.wall_rtol)
         if failures:
             print(f"serving regression gate FAILED "
                   f"({len(failures)} finding(s)):", file=sys.stderr)
@@ -93,9 +108,13 @@ def main() -> int:
             print("(intentional change? regenerate the baseline — see "
                   "--help)", file=sys.stderr)
             return 1
+        ratio = candidate.get("headline", {}) \
+            .get("batched_model_speedup")
+        batched = (f", batched speedup {ratio:.2f}x"
+                   if ratio is not None else "")
         print(f"serving regression gate OK: "
               f"{len(baseline['cells'])} cells, probe messages exact, "
-              f"hit rate within ±{args.hit_rtol:.1%}")
+              f"hit rate within ±{args.hit_rtol:.1%}{batched}")
         return 0
     if baseline.get("kind") == "simspeed":
         failures = compare_simspeed(baseline, candidate,

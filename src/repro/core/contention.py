@@ -92,6 +92,14 @@ def group_prefix_sum(keys: jnp.ndarray, values: jnp.ndarray,
     "flits ahead of mine at my injection port". Like ``group_rank`` it
     falls back to the one-hot reference when the composite sort key
     would overflow int32.
+
+    Position within ``keys`` is arrival order, and the stable sort
+    preserves it — which is what lets the serving engine's batched
+    admission rounds reuse this primitive unchanged: the engine flattens
+    a round's ``B x shards x blocks`` remote fetches *slot-major* into
+    one NoC round, so earlier admission slots' flits rank ahead of
+    later slots' at every port, the intra-round ordered accounting the
+    batched round contract requires (see ``repro.serving.engine``).
     """
     R = keys.shape[0]
     v = jnp.where(mask, values, 0.0).astype(jnp.float32)

@@ -553,24 +553,47 @@ def compare_simspeed(baseline: dict, candidate: dict, *,
 
 
 def _serving_cell_key(cell: dict) -> tuple:
-    return (cell["shards"], cell["mix"], cell["policy"])
+    # pre-batching (schema 1) cells carry no "slots" key: B=1
+    return (cell["shards"], cell["mix"], cell["policy"],
+            cell.get("slots", 1))
+
+
+#: Absolute floor on the batched modeled-throughput ratio (B=max vs
+#: B=1 requests per kcycle): the batched-admission acceptance bar.
+BATCHED_SPEEDUP_FLOOR = 1.5
 
 
 def compare_serving(baseline: dict, candidate: dict, *,
                     hit_rtol: float = 0.005,
-                    latency_rtol: Optional[float] = None) -> List[str]:
+                    latency_rtol: Optional[float] = None,
+                    batched_rtol: float = 0.15,
+                    wall_rtol: Optional[float] = None) -> List[str]:
     """Regression gate for ``benchmarks.fig_serving_scale`` reports
     (``kind == "serving"``); returns human-readable failure strings.
 
     The serving engine is integer-deterministic on a seeded stream, so
-    the blocking checks are tight: per (shards x mix x policy) cell,
-    **probe-message counts gate exactly** (the paper's claim — ``ata``
-    must stay at zero, and a drifting ``broadcast`` count means the
-    probe accounting changed) and **hit rate** within ``hit_rtol``
-    (nominally exact too; the tolerance absorbs only the float
-    division). Modeled p99 latency is gated only when ``latency_rtol``
-    is given (it folds in NoC queue state and cost constants that
-    legitimately move with the cost model). Wall-clock throughput is
+    the blocking checks are tight: per (shards x mix x policy x slots)
+    cell, **probe-message counts gate exactly** (the paper's claim —
+    ``ata`` must stay at zero, and a drifting ``broadcast`` count
+    means the probe accounting changed) and **hit rate** within
+    ``hit_rtol`` (nominally exact too; the tolerance absorbs only the
+    float division). Cells without a ``slots`` key (schema-1
+    baselines) compare as ``slots=1``, so an old baseline keeps gating
+    the new per-B grid's B=1 cells. Modeled p99 latency is gated only
+    when ``latency_rtol`` is given (it folds in NoC queue state and
+    cost constants that legitimately move with the cost model).
+
+    The ``batched_model_speedup`` headline — worst-cell modeled
+    requests-per-kcycle ratio, B=max vs B=1 — gates **one-sided**: it
+    must clear both the absolute :data:`BATCHED_SPEEDUP_FLOOR` (the
+    batched-admission acceptance bar; the ratio is deterministic, so
+    this is machine-portable like the simspeed fused-speedup gate) and
+    ``baseline * (1 - batched_rtol)``. The companion
+    ``batched_wall_speedup`` (host wall-clock ratio) is gated only
+    when ``wall_rtol`` is given — batched replay is slot-sequential
+    by contract, so wall time tracks admitted blocks and the ratio
+    hovers near 1x; the opt-in floor only catches pathological
+    slowdowns on same-runner setups. Per-cell wall-clock throughput is
     never gated — it is host-dependent and tracked by the nightly
     trend instead. Also fails on kind/config mismatch, schema
     downgrade, and missing cells.
@@ -621,4 +644,34 @@ def compare_serving(baseline: dict, candidate: dict, *,
                     f"p99-latency drift {drift:+.2%} beyond "
                     f"±{latency_rtol:.0%} at {key}: "
                     f"{base_v:.1f} -> {cand_v:.1f}")
+
+    base_head = baseline.get("headline", {})
+    cand_head = candidate.get("headline", {})
+    base_ratio = base_head.get("batched_model_speedup")
+    if base_ratio is not None:
+        cand_ratio = cand_head.get("batched_model_speedup")
+        if cand_ratio is None:
+            failures.append("batched_model_speedup headline missing "
+                            "from candidate")
+        else:
+            floor = max(BATCHED_SPEEDUP_FLOOR,
+                        base_ratio * (1 - batched_rtol))
+            if cand_ratio < floor:
+                failures.append(
+                    f"batched modeled speedup fell below "
+                    f"{floor:.3f}x (abs floor "
+                    f"{BATCHED_SPEEDUP_FLOOR}x, baseline "
+                    f"{base_ratio:.3f}x -{batched_rtol:.0%}): "
+                    f"{cand_ratio:.3f}x at "
+                    f"B={cand_head.get('batched_slots')} "
+                    "(batched admission stopped amortizing rounds)")
+        if wall_rtol is not None:
+            base_w = base_head.get("batched_wall_speedup")
+            cand_w = cand_head.get("batched_wall_speedup")
+            if base_w is not None and cand_w is not None \
+                    and cand_w < base_w * (1 - wall_rtol):
+                failures.append(
+                    f"batched wall speedup fell beyond "
+                    f"-{wall_rtol:.0%}: {base_w:.3f}x -> "
+                    f"{cand_w:.3f}x")
     return failures

@@ -28,9 +28,24 @@ small region reserved for the shared-prefix pools — random draws at
 ~1e7 blocks in an int31 space would collide often enough (birthday
 bound) to fake measurable sharing.
 
-The grid admits at most one request per shard per round — arrival
-``rate`` is the per-shard admission probability, and everything stays
-int32 (JAX default; the engine's tag arrays are int32).
+The grid admits at most one request per shard per *sub-round* —
+arrival ``rate`` is the per-shard admission probability, and
+everything stays int32 (JAX default; the engine's tag arrays are
+int32).
+
+**Batched admission** (ROADMAP item 1 follow-on): a stream may carry
+``slots = B > 1``, meaning each admission *round* spans ``B``
+consecutive rows of the grid — ``B`` priority-ordered admission slots
+per shard per round. The array layout is deliberately slot-major
+sequential (row ``t*B + b`` is slot ``b`` of round ``t``), so the
+engine's slot-order semantics — later slots see earlier slots'
+replication inserts — coincide with plain row-order replay and the
+oracle needs no change at all: iterating rows *is* slot-sequential
+replay. ``slots`` therefore never changes any hit/probe/fetch counter;
+it changes the *throughput model* (the engine charges one round of
+``max`` latency per ``B`` admissions) and the admission capacity of
+:meth:`ServingMix.make_stream` (up to ``B`` contending tenants win
+per shard per round instead of one).
 """
 from __future__ import annotations
 
@@ -109,16 +124,23 @@ def _resolve_tenant(t: Union[str, TenantParams]) -> TenantParams:
 class RequestStream:
     """A (rounds, shards) request grid, the serving engine's input.
 
-    ``valid[t, c]`` marks a request arriving at shard ``c`` in round
-    ``t``; its block-hash chain is ``hashes[t, c, :n_blocks[t, c]]``
-    (positive int32; lanes past ``n_blocks`` are 0, which never
-    matches a directory tag) and ``tenant[t, c]`` its mix-slot id.
+    ``valid[t, c]`` marks a request arriving at shard ``c`` in
+    sub-round ``t``; its block-hash chain is
+    ``hashes[t, c, :n_blocks[t, c]]`` (positive int32; lanes past
+    ``n_blocks`` are 0, which never matches a directory tag) and
+    ``tenant[t, c]`` its mix-slot id.
+
+    ``slots`` (``B``) groups every ``B`` consecutive rows into one
+    *admission round* of ``B`` priority-ordered slots per shard (see
+    the module docstring); row order is slot order, so the arrays are
+    layout-identical to their ``B=1`` slot-sequentialized replay.
     """
     valid: np.ndarray     # (T, C) bool
     hashes: np.ndarray    # (T, C, K) int32, >= 1 on valid block lanes
     n_blocks: np.ndarray  # (T, C) int32
     tenant: np.ndarray    # (T, C) int32 mix-slot id (0 where invalid)
     tenants: Tuple[str, ...] = ("tenant",)
+    slots: int = 1        # admission slots per shard per round (B)
 
     def __post_init__(self):
         T, C, _ = self.hashes.shape
@@ -126,10 +148,22 @@ class RequestStream:
         assert self.n_blocks.shape == (T, C)
         assert self.tenant.shape == (T, C)
         assert self.hashes.dtype == np.int32, self.hashes.dtype
+        if not 1 <= self.slots <= _MAX_SLOTS:
+            raise ValueError(
+                f"slots {self.slots} outside [1, {_MAX_SLOTS}]")
+        if T % self.slots:
+            raise ValueError(
+                f"{T} grid rows not divisible by slots={self.slots}")
 
     @property
     def rounds(self) -> int:
+        """Grid rows (= sub-rounds; ``admission_rounds * slots``)."""
         return self.hashes.shape[0]
+
+    @property
+    def admission_rounds(self) -> int:
+        """Engine scan steps: each admits up to ``slots`` per shard."""
+        return self.hashes.shape[0] // self.slots
 
     @property
     def n_shards(self) -> int:
@@ -171,6 +205,28 @@ class RequestStream:
                              n_blocks=n_blocks.reshape(T * C, C),
                              tenant=tenant.reshape(T * C, C),
                              tenants=self.tenants)
+
+    def batched(self, slots: int) -> "RequestStream":
+        """The same request population at ``slots`` admissions/round.
+
+        Pure relabeling: the arrays are shared (slot-major layout means
+        no data moves), only the round grouping changes. Requires the
+        row count to divide evenly. Because the engine replays slots in
+        sequential sub-rounds, every hit/probe/fetch counter is
+        bit-identical across ``slots`` values — only the throughput
+        model (rounds charged) changes. ``batched(1)`` is
+        :meth:`slot_sequential`.
+        """
+        return dataclasses.replace(self, slots=slots)
+
+    def slot_sequential(self) -> "RequestStream":
+        """The ``B=1`` replay of this stream: one slot per round.
+
+        Row order *is* slot order, so this is ``batched(1)`` — the
+        canonical reference the batched-exactness property tests
+        compare against.
+        """
+        return dataclasses.replace(self, slots=1)
 
 
 def _arrival_rate(p: TenantParams, rounds: int,
@@ -282,37 +338,65 @@ class ServingMix:
                 for s, t in enumerate(self.tenants)]
 
     def make_stream(self, *, n_shards: int, rounds: int,
-                    seed: int = 0) -> RequestStream:
+                    seed: int = 0, slots: int = 1) -> RequestStream:
         """Superimpose the component streams onto one request grid.
 
-        Slots contending for the same (round, shard) admission slot are
-        resolved by a rotating priority (slot ``s`` wins round ``t``
-        when it minimizes ``(s + t) % n_slots`` among the contenders),
-        so no tenant is structurally starved. A one-tenant mix is the
-        solo stream, arrays bit-identical.
+        Mix slots contending for the same (round, shard) admission are
+        resolved by a rotating priority (mix slot ``s`` wins round
+        ``t`` when it minimizes ``(s + t) % n_slots`` among the
+        contenders), so no tenant is structurally starved. A one-tenant
+        mix at ``slots=1`` is the solo stream, arrays bit-identical.
+
+        ``slots = B > 1`` widens admission: the *first ``B``* priority-
+        ordered contenders win (stable sort, so ``B=1`` picks exactly
+        the old ``argmin`` winner), landing in slot order on ``B``
+        consecutive grid rows per round (the batched layout of
+        :class:`RequestStream`). Offered traffic is untouched —
+        batching only admits requests that a ``B=1`` grid would have
+        dropped.
         """
+        if not 1 <= slots <= _MAX_SLOTS:
+            raise ValueError(f"slots {slots} outside [1, {_MAX_SLOTS}]")
         comps = self.component_streams(n_shards=n_shards, rounds=rounds,
                                        seed=seed)
         names = tuple(_resolve_tenant(t).name for t in self.tenants)
-        if len(comps) == 1:
+        if len(comps) == 1 and slots == 1:
             return dataclasses.replace(comps[0], tenants=names)
         n = len(comps)
+        B = slots
         K = max(c.max_blocks for c in comps)
         valid = np.stack([c.valid for c in comps])          # (n, T, C)
         hashes = np.zeros((n, rounds, n_shards, K), np.int32)
         for s, c in enumerate(comps):
             hashes[s, :, :, :c.max_blocks] = c.hashes
         n_blocks = np.stack([c.n_blocks for c in comps])
-        slots = np.arange(n)
-        prio = (slots[:, None] + np.arange(rounds)[None, :]) % n
+        tenant_id = np.arange(n)
+        prio = (tenant_id[:, None] + np.arange(rounds)[None, :]) % n
         key = np.where(valid, prio[:, :, None], n)          # (n, T, C)
-        winner = np.argmin(key, axis=0)                     # (T, C)
-        any_valid = valid.any(axis=0)
-        w = winner[None, :, :, None]
+        # stable sort => slot b takes the b-th best contender, and the
+        # b=0 row reproduces argmin's first-occurrence winner exactly;
+        # slots beyond the contender count stay empty
+        nb_take = min(B, n)
+        order = np.argsort(key, axis=0, kind="stable")[:nb_take]
+        bvalid = np.take_along_axis(key, order, axis=0) < n
+        bh = np.take_along_axis(hashes, order[..., None], axis=0)
+        bn = np.take_along_axis(n_blocks, order, axis=0) * bvalid
+        bt = (order * bvalid).astype(np.int32)
+        if nb_take < B:
+            z = (B - nb_take, rounds, n_shards)
+            bvalid = np.concatenate([bvalid, np.zeros(z, bool)])
+            bh = np.concatenate([bh, np.zeros(z + (K,), np.int32)])
+            bn = np.concatenate([bn, np.zeros(z, np.int32)])
+            bt = np.concatenate([bt, np.zeros(z, np.int32)])
+
+        def rows(a):  # (B, T, C, ...) -> (T*B, C, ...) slot-major rows
+            return np.swapaxes(a, 0, 1).reshape(
+                (rounds * B,) + a.shape[2:])
+
         return RequestStream(
-            valid=any_valid,
-            hashes=np.take_along_axis(hashes, w, axis=0)[0],
-            n_blocks=np.take_along_axis(n_blocks, winner[None], axis=0)[0]
-            * any_valid,
-            tenant=(winner * any_valid).astype(np.int32),
-            tenants=names)
+            valid=rows(bvalid),
+            hashes=rows(bh * bvalid[..., None]),
+            n_blocks=rows(bn),
+            tenant=rows(bt),
+            tenants=names,
+            slots=B)

@@ -281,7 +281,18 @@ def run_stream(policy: str, cfg: AtaCacheConfig, stream) -> Stats:
     for the legacy ``"remote"``; ``"decoupled"`` stays a
     ``lookup_prefix``-only policy (its int64 home hash has no int32
     engine analog).
+
+    **Batched admission** (``stream.slots = B > 1``) needs no code
+    here — and that is the point of the slot-major layout: the
+    engine's batched contract is "replay the ``B`` slots of a round as
+    sequential sub-rounds", and this loop's row order *is* that
+    sequential replay (one clock tick per row = one per sub-round).
+    The oracle therefore sequentializes slots by construction, and its
+    counters are the reference for every ``B`` at once; the
+    exactness tests also route through
+    ``stream.slot_sequential()`` to make the comparison explicit.
     """
+    stream = stream.slot_sequential()
     policy = {"broadcast": "remote"}.get(policy, policy)
     if policy not in ("private", "remote", "ata"):
         raise ValueError(f"run_stream supports private/broadcast/ata, "

@@ -365,6 +365,58 @@ def test_hash_blocks_prefix_property(tokens, cut):
 
 
 # ---------------------------------------------------------------------------
+# serving engine: batched admission is slot-sequential by contract
+# ---------------------------------------------------------------------------
+#: One fixed config so every example reuses the per-(policy, B)
+#: executables instead of recompiling (small directory for evictions).
+_SERVE_CFG = None
+
+
+def _serve_cfg():
+    global _SERVE_CFG
+    if _SERVE_CFG is None:
+        from repro.serving.engine import ServingConfig
+        _SERVE_CFG = ServingConfig(n_sets=8, n_ways=2)
+    return _SERVE_CFG
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(("ata", "private", "broadcast")),
+       st.sampled_from((2, 4)),
+       st.lists(st.sampled_from(("chat", "rag", "batch")), min_size=1,
+                max_size=3, unique=True),
+       st.integers(0, 1000))
+def test_batched_serve_equals_slot_sequential(policy, B, tenants, seed):
+    """The batched round contract, as a property: serving a stream at
+    ``B`` slots per shard per round IS serving its slot-sequentialized
+    ``B=1`` relabeling — every counter integer-for-integer, every
+    per-request array bit-equal — across policies, slot counts, mixes
+    and seeds. Only the admission-round critical-path aggregation
+    (``cycles``, hence modeled throughput) may differ."""
+    from repro.core.trace.serving import ServingMix
+    from repro.serving.engine import serve_stream
+    stream = ServingMix(tuple(tenants)).make_stream(
+        n_shards=4, rounds=24, seed=seed, slots=B)
+    cfg = _serve_cfg()
+    rb = serve_stream(policy, stream, cfg)
+    r1 = serve_stream(policy, stream.slot_sequential(), cfg)
+    assert rb.slots == B and r1.slots == 1
+    for f in ("n_requests", "local_hits", "remote_hits",
+              "recomputed_blocks", "probe_messages",
+              "remote_fetch_blocks", "directory_sync_entries"):
+        assert getattr(rb, f) == getattr(r1, f), f
+    for f in ("shard_load", "latency", "served", "tenant_requests",
+              "tenant_hit_blocks", "tenant_blocks",
+              "tenant_latency_sum"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rb, f)), np.asarray(getattr(r1, f)),
+            err_msg=f)
+    assert rb.noc_injected == r1.noc_injected
+    # batching can only shorten the modeled critical path
+    assert rb.cycles <= r1.cycles
+
+
+# ---------------------------------------------------------------------------
 # serving request streams: mix superposition
 # ---------------------------------------------------------------------------
 @settings(max_examples=12, deadline=None)

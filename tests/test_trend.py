@@ -115,42 +115,54 @@ def test_simspeed_reports_join_the_series(tmp_path):
     assert all(not r["flagged"] for r in rows)
 
 
-def _serving(hit, p99, rps):
+def _serving(hit, p99, rps, slots=None, headline=None):
+    cell = {"shards": 8, "mix": "chat+rag", "policy": "ata",
+            "requests": 4000, "hit_rate": hit,
+            "probe_messages": 0, "p99_latency": p99,
+            "throughput_rps": rps}
+    if slots is not None:
+        cell["slots"] = slots
     return {
-        "kind": "serving", "schema": 1,
+        "kind": "serving", "schema": 1 if slots is None else 2,
         "config": {"shards": [8], "rounds": 512},
-        "cells": [{"shards": 8, "mix": "chat+rag", "policy": "ata",
-                   "requests": 4000, "hit_rate": hit,
-                   "probe_messages": 0, "p99_latency": p99,
-                   "throughput_rps": rps}],
-        "headline": {"probes_filtered": 1000},
+        "cells": [cell],
+        "headline": dict({"probes_filtered": 1000}, **(headline or {})),
     }
 
 
 def test_serving_reports_join_the_series(tmp_path):
     """Serving-engine reports ride the same history: per
-    (shards x mix x policy) cell, hit rate + p99 + throughput series."""
+    (shards x mix x policy x slots) cell, hit rate + p99 + throughput
+    series — pre-batching reports (no ``slots`` key) join the B=1
+    series — plus the batched req/s-ratio headline series."""
     d = tmp_path / "bench_history"
     d.mkdir()
     (d / "2026-08-08_serving.json").write_text(
         json.dumps(_serving(0.41, 720.0, 50e3)))
     (d / "2026-08-09_serving.json").write_text(
-        json.dumps(_serving(0.41, 726.0, 61e3)))
+        json.dumps(_serving(0.41, 726.0, 61e3, slots=1,
+                            headline={"batched_slots": 4,
+                                      "batched_model_speedup": 3.4,
+                                      "batched_wall_speedup": 0.9})))
     (d / "2026-08-09.json").write_text(json.dumps(_report(20.0)))
     series = bench_trend._cell_series(bench_trend.load_history(str(d)))
-    key = ("serving", 8, "chat+rag", "ata", "hit_rate")
+    key = ("serving", 8, "chat+rag", "ata", 1, "hit_rate")
     assert [v for _, v in series[key]] == [0.41, 0.41]
-    assert ("serving", 8, "chat+rag", "ata", "p99_latency") in series
-    rps = series[("serving", 8, "chat+rag", "ata", "throughput_rps")]
+    assert ("serving", 8, "chat+rag", "ata", 1, "p99_latency") in series
+    rps = series[("serving", 8, "chat+rag", "ata", 1, "throughput_rps")]
     assert [v for _, v in rps] == [50e3, 61e3]
+    # batched headlines get their own series (only where reported)
+    model = series[("serving", "B4/B1", "batched_model_speedup")]
+    assert [v for _, v in model] == [3.4]
+    assert ("serving", "B4/B1", "batched_wall_speedup") in series
     # sensitivity reports still parse alongside
     assert ("solo", "ata", "noc_bw", 16.0, "ipc") in series
     rows = bench_trend.trend_rows(series, rtol=0.05)
     by_key = {r["key"]: r for r in rows}
-    assert not by_key[("serving", 8, "chat+rag", "ata", "hit_rate")
+    assert not by_key[("serving", 8, "chat+rag", "ata", 1, "hit_rate")
                       ]["flagged"]
     # host throughput may drift beyond rtol — informational by design
-    assert by_key[("serving", 8, "chat+rag", "ata", "throughput_rps")
+    assert by_key[("serving", 8, "chat+rag", "ata", 1, "throughput_rps")
                   ]["flagged"]
 
 
