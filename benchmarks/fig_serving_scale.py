@@ -74,23 +74,41 @@ def _rounds_for(mix, n_shards, target, seed):
     return math.ceil(1.02 * target / (occupancy * n_shards))
 
 
-def _timed_serve(policy, stream, cfg, reps):
-    """Warmed best-of-``reps`` replay (the sim_speed timing idiom)."""
+def _timed_serve(policy, stream, cfg, reps, telemetry=None):
+    """Warmed best-of-``reps`` replay (the sim_speed timing idiom).
+
+    The timed span always replays the plain (``telemetry=None``)
+    executable so wall-clock numbers stay comparable across runs; when
+    ``telemetry`` is given, one extra instrumented replay supplies the
+    result whose latency histogram makes ``p50/p99`` exact quantile
+    reads (counters are bit-identical either way — tier-1 tested).
+    """
     from repro.serving import serve_stream
     res = serve_stream(policy, stream, cfg)   # warmup (compiles too)
+    timeline = None
+    if telemetry is not None:
+        res, timeline = serve_stream(policy, stream, cfg,
+                                     telemetry=telemetry)
     best = float("inf")
     for _ in range(max(reps, 1)):
         t0 = time.perf_counter()
-        res = serve_stream(policy, stream, cfg)
+        serve_stream(policy, stream, cfg)
         best = min(best, time.perf_counter() - t0)
-    return res, best
+    return res, timeline, best
 
 
 def run(rounds=None, n_requests=DEFAULT_REQUESTS, shards=SHARD_COUNTS,
         mixes=None, policies=None, slot_counts=SLOT_COUNTS, reps=2,
-        cfg=None, seed=0, out_json=None):
+        cfg=None, seed=0, out_json=None, telemetry=None):
+    from repro.core.telemetry import TelemetryConfig
+    from repro.obs.manifest import PhaseTimer, run_manifest
     from repro.serving import SERVING_POLICIES, ServingConfig
     cfg = cfg or ServingConfig()
+    if telemetry is None:
+        # default on: the reported p50/p99 become exact histogram
+        # quantiles instead of percentiles over materialized latencies
+        telemetry = TelemetryConfig()
+    timer = PhaseTimer()
     mixes = _mixes() if mixes is None else mixes
     policies = tuple(policies or SERVING_POLICIES)
     slot_counts = tuple(sorted(set(slot_counts)))
@@ -112,8 +130,10 @@ def run(rounds=None, n_requests=DEFAULT_REQUESTS, shards=SHARD_COUNTS,
             for policy in policies:
                 by_b = {}
                 for b in slot_counts:
-                    res, wall = _timed_serve(
-                        policy, stream.batched(b), cfg, reps)
+                    with timer.phase(f"replay.{policy}"):
+                        res, _tl, wall = _timed_serve(
+                            policy, stream.batched(b), cfg, reps,
+                            telemetry=telemetry)
                     rps = stream.n_requests / wall
                     by_b[b] = (res, rps)
                     cells.append({
@@ -128,6 +148,7 @@ def run(rounds=None, n_requests=DEFAULT_REQUESTS, shards=SHARD_COUNTS,
                         "remote_fetch_blocks": res.remote_fetch_blocks,
                         "p50_latency": res.p50_latency,
                         "p99_latency": res.p99_latency,
+                        "hist_exact": res.hist_exact,
                         "throughput_rps": rps,
                         "requests_per_kcycle": res.requests_per_kcycle,
                         "load_imbalance": res.load_imbalance,
@@ -193,6 +214,7 @@ def run(rounds=None, n_requests=DEFAULT_REQUESTS, shards=SHARD_COUNTS,
         },
         "cells": cells,
         "headline": headline,
+        "manifest": run_manifest(phases=timer.phases),
     }
     if out_json:
         with open(out_json, "w") as f:

@@ -2,7 +2,21 @@
 serving + roofline. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--rounds N] \
-      [--report-json PATH] [--serving-json PATH] [--serving-rounds N]
+      [--report-json PATH] [--serving-json PATH] [--serving-rounds N] \
+      [--telemetry OUT_DIR]
+
+Every figure is timed individually (``figure.<name>.wall_s`` lines)
+and run under a failure collector: a figure that raises prints its
+traceback, the remaining figures still run, and the process exits
+non-zero at the end listing what failed — CI sees every broken figure
+in one run instead of one per push.
+
+--telemetry OUT_DIR runs the observability smoke capture
+(``benchmarks.telemetry_capture``): one instrumented simulator point
+and one instrumented serving replay, writing windowed timelines
+(JSON/CSV), Perfetto traces, a run manifest, and a
+``kind="telemetry"`` report into OUT_DIR with conservation checked
+inline.
 
 --report-json additionally runs the contention-policy-zoo sensitivity
 sweep (``repro.core.report``: private/ata/ciao/victim over widened
@@ -39,6 +53,35 @@ in CI logs.
 import argparse
 import sys
 import time
+import traceback
+
+#: figures that raised this run; non-empty -> exit code 1 at the end
+_FAILURES = []
+
+
+def _figure(name, fn, *args, **kwargs):
+    """Run one figure: time it, survive it, account for it.
+
+    A raising figure prints its traceback to stderr and is recorded in
+    ``_FAILURES`` (the suite exits non-zero after the *last* figure),
+    so CI surfaces every broken figure in a single run. Returns the
+    figure's return value, or None on failure.
+    """
+    from benchmarks.common import emit
+    t0 = time.perf_counter()
+    try:
+        out = fn(*args, **kwargs)
+    except Exception:                       # noqa: BLE001
+        wall = time.perf_counter() - t0
+        print(f"FIGURE FAILED: {name} after {wall:.2f}s",
+              file=sys.stderr)
+        traceback.print_exc()
+        _FAILURES.append(name)
+        emit(f"figure.{name}.wall_s", wall * 1e6, "FAILED")
+        return None
+    wall = time.perf_counter() - t0
+    emit(f"figure.{name}.wall_s", wall * 1e6, f"{wall:.2f}")
+    return out
 
 
 def main() -> None:
@@ -55,7 +98,11 @@ def main() -> None:
     ap.add_argument("--serving-rounds", type=int, default=None,
                     help="fixed rounds per serving stream (CI smoke: "
                     "512); default calibrates to >= 1M requests")
+    ap.add_argument("--telemetry", default=None, metavar="OUT_DIR",
+                    help="run the observability smoke capture and "
+                    "write timelines/traces/manifest into OUT_DIR")
     args = ap.parse_args()
+    del _FAILURES[:]
     k = 0 if args.full else 1
     k9 = 0 if args.full else 3
 
@@ -68,18 +115,25 @@ def main() -> None:
     from benchmarks.common import emit
     from repro.core import sweep as sweep_engine
     t0 = time.perf_counter()
-    fig8_ipc.run(kernels_per_app=k, rounds=args.rounds)
-    fig9_kernels.run(kernels_per_app=k9, rounds=args.rounds)
-    fig10_latency.run(kernels_per_app=k, rounds=args.rounds)
-    table1_landscape.run(kernels_per_app=k, rounds=args.rounds)
-    fig_sweep_geometry.run(kernels_per_app=k, rounds=args.rounds)
-    fig_noc_topology.run(kernels_per_app=k, rounds=args.rounds)
+    _figure("fig8_ipc", fig8_ipc.run, kernels_per_app=k,
+            rounds=args.rounds)
+    _figure("fig9_kernels", fig9_kernels.run, kernels_per_app=k9,
+            rounds=args.rounds)
+    _figure("fig10_latency", fig10_latency.run, kernels_per_app=k,
+            rounds=args.rounds)
+    _figure("table1_landscape", table1_landscape.run, kernels_per_app=k,
+            rounds=args.rounds)
+    _figure("fig_sweep_geometry", fig_sweep_geometry.run,
+            kernels_per_app=k, rounds=args.rounds)
+    _figure("fig_noc_topology", fig_noc_topology.run, kernels_per_app=k,
+            rounds=args.rounds)
     # one fairness grid run serves both the figure and (below) the
     # report's mix section — the mixes are never simulated twice
     from repro.core.report import mix_grid_run
-    mix_run = mix_grid_run(rounds=args.rounds)
-    fig_mix_fairness.run(kernels_per_app=k, rounds=args.rounds,
-                         mix_run=mix_run)
+    mix_run = _figure("mix_grid", mix_grid_run, rounds=args.rounds)
+    if mix_run is not None:
+        _figure("fig_mix_fairness", fig_mix_fairness.run,
+                kernels_per_app=k, rounds=args.rounds, mix_run=mix_run)
     wall = time.perf_counter() - t0
     # Sweep-engine perf counters: compile count and wall time make
     # executable-churn regressions visible in CI logs.
@@ -87,40 +141,59 @@ def main() -> None:
     emit("sweep.executables_compiled", 0.0, sweep_engine.compile_count())
     emit("sweep.devices", 0.0, len(jax.devices()))
     if args.report_json:
-        from repro.core import report as sensitivity
-        t0 = time.perf_counter()
-        from repro.core.noc import PAPER_NOCS
-        rep = sensitivity.run_sensitivity(
-            kernels_per_app=None if args.full else 1, rounds=args.rounds,
-            mix_pairings=sensitivity.MIX_PAIRINGS, mix_run=mix_run,
-            noc_models=PAPER_NOCS)
-        md_path = sensitivity.write_report(args.report_json, rep)
-        emit("sensitivity.cells", (time.perf_counter() - t0) * 1e6,
-             len(rep["cells"]))
-        emit("sensitivity.executables", 0.0,
-             rep["sweep"]["n_executables"])
-        emit("sensitivity.mix_cells", 0.0, len(rep["mix"]["cells"]))
-        emit("sensitivity.mix_executables", 0.0,
-             rep["mix"]["sweep"]["n_executables"])
-        emit("sensitivity.noc_cells", 0.0, len(rep["noc"]["cells"]))
-        emit("sensitivity.noc_executables", 0.0,
-             rep["noc"]["sweep"]["n_executables"])
-        print(f"sensitivity report: {args.report_json} + {md_path}",
-              file=sys.stderr)
+        def _sensitivity():
+            from repro.core import report as sensitivity
+            t0 = time.perf_counter()
+            from repro.core.noc import PAPER_NOCS
+            rep = sensitivity.run_sensitivity(
+                kernels_per_app=None if args.full else 1,
+                rounds=args.rounds,
+                mix_pairings=sensitivity.MIX_PAIRINGS, mix_run=mix_run,
+                noc_models=PAPER_NOCS)
+            md_path = sensitivity.write_report(args.report_json, rep)
+            emit("sensitivity.cells", (time.perf_counter() - t0) * 1e6,
+                 len(rep["cells"]))
+            emit("sensitivity.executables", 0.0,
+                 rep["sweep"]["n_executables"])
+            emit("sensitivity.mix_cells", 0.0, len(rep["mix"]["cells"]))
+            emit("sensitivity.mix_executables", 0.0,
+                 rep["mix"]["sweep"]["n_executables"])
+            emit("sensitivity.noc_cells", 0.0, len(rep["noc"]["cells"]))
+            emit("sensitivity.noc_executables", 0.0,
+                 rep["noc"]["sweep"]["n_executables"])
+            print(f"sensitivity report: {args.report_json} + {md_path}",
+                  file=sys.stderr)
+        _figure("sensitivity_report", _sensitivity)
 
-    kernel_micro.run()
-    serving_ata.run()
+    _figure("kernel_micro", kernel_micro.run)
+    _figure("serving_ata", serving_ata.run)
 
     if args.serving_json:
-        from benchmarks import fig_serving_scale
-        t0 = time.perf_counter()
-        srep = fig_serving_scale.run(rounds=args.serving_rounds,
-                                     out_json=args.serving_json)
-        emit("serving.cells", (time.perf_counter() - t0) * 1e6,
-             len(srep["cells"]))
-        emit("serving.requests_total", 0.0,
-             sum(c["requests"] for c in srep["cells"]))
-        print(f"serving report: {args.serving_json}", file=sys.stderr)
+        def _serving_scale():
+            from benchmarks import fig_serving_scale
+            t0 = time.perf_counter()
+            srep = fig_serving_scale.run(rounds=args.serving_rounds,
+                                         out_json=args.serving_json)
+            emit("serving.cells", (time.perf_counter() - t0) * 1e6,
+                 len(srep["cells"]))
+            emit("serving.requests_total", 0.0,
+                 sum(c["requests"] for c in srep["cells"]))
+            print(f"serving report: {args.serving_json}",
+                  file=sys.stderr)
+        _figure("serving_scale", _serving_scale)
+
+    if args.telemetry:
+        def _telemetry():
+            from benchmarks import telemetry_capture
+            rep = telemetry_capture.capture(args.telemetry,
+                                            rounds=args.rounds)
+            emit("telemetry.sim_windows", 0.0,
+                 rep["sim"]["n_windows"])
+            emit("telemetry.serving_p99", 0.0,
+                 f"{rep['serving']['p99_latency']:.1f}cyc")
+            print(f"telemetry capture: {args.telemetry}",
+                  file=sys.stderr)
+        _figure("telemetry_capture", _telemetry)
 
     # roofline summary (reads dry-run artifacts if present)
     try:
@@ -143,6 +216,11 @@ def main() -> None:
                  f"mem={mem_s * 1e6:.2f}us;comp={comp_s * 1e6:.2f}us")
     except Exception as e:                      # noqa: BLE001
         print(f"roofline.kernel.skipped,0,{e!r}", file=sys.stderr)
+
+    if _FAILURES:
+        print(f"{len(_FAILURES)} figure(s) failed: "
+              f"{', '.join(_FAILURES)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

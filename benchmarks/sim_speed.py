@@ -35,6 +35,7 @@ import time
 from repro.core import PAPER_GEOMETRY
 from repro.core.metrics import app_traces
 from repro.core.sweep import SweepGrid, SweepPoint
+from repro.obs.manifest import run_manifest
 from benchmarks.common import emit
 
 APP = "cfd"
@@ -120,6 +121,11 @@ def run(rounds=64, reps=3, backends=DEFAULT_BACKENDS, interpret=False,
                                        for c in cells)},
         "cells": cells,
         "headline": headline,
+        # provenance; compare_simspeed iterates only the baseline's
+        # sections, so the block never breaks committed baselines
+        "manifest": run_manifest(
+            phases={f"backend.{c['backend']}": c["wall_s"]
+                    for c in cells}),
     }
     if out_json:
         with open(out_json, "w") as f:

@@ -1,0 +1,141 @@
+"""Small end-to-end telemetry capture: timelines, traces, manifest.
+
+``python -m benchmarks.run --telemetry OUT/`` (or calling
+:func:`capture` directly) runs one instrumented simulator point and
+one instrumented serving replay, then writes everything the
+observability stack can produce into ``OUT/``:
+
+  sim_timeline.json / .csv      windowed counter series (simulator)
+  sim_trace.json                Chrome-trace-event (Perfetto) view
+  serve_timeline.json / .csv    windowed counter series (serving)
+  serve_trace.json              Perfetto view of the replay
+  manifest.json                 provenance (git sha, jax, costs, walls)
+  telemetry_report.json         ``kind="telemetry"`` summary for
+                                bench_history / scripts.bench_trend
+
+Conservation is checked inline (``Timeline.check`` raises
+:class:`repro.obs.ConservationError` on any window-sum /= total
+mismatch), so a capture that writes files is also a capture that
+validated them — CI uploads the directory as a build artifact.
+"""
+import json
+import os
+
+SCHEMA = 1
+#: default capture sizes — small enough for the CI smoke lane, large
+#: enough that every counter axis (core/app/link/tenant/slot) is hot
+SIM_ROUNDS = 96
+SERVE_ROUNDS = 256
+WINDOW = 32
+SIM_ARCH = "ata"
+SIM_NOC = "crossbar"          # non-ideal: exercises the link counters
+SERVE_POLICY = "ata"
+SERVE_SHARDS = 8
+SERVE_MIX = ("chat", "rag")
+
+
+def capture(out_dir, rounds=None, out_json=None):
+    """Run the instrumented smoke points and write all artifacts.
+
+    Returns the ``kind="telemetry"`` report dict (also written to
+    ``OUT/telemetry_report.json``, and to ``out_json`` when given —
+    the nightly job points that at ``bench_history/``).
+    """
+    from repro.core import PAPER_GEOMETRY, TelemetryConfig, simulate
+    from repro.core.metrics import app_traces
+    from repro.core.trace.serving import ServingMix
+    from repro.obs.manifest import PhaseTimer, run_manifest
+    from repro.obs.perfetto import write_trace
+    from repro.serving import ServingConfig, serve_stream
+
+    os.makedirs(out_dir, exist_ok=True)
+    sim_rounds = rounds if rounds is not None else SIM_ROUNDS
+    sim_rounds += -sim_rounds % WINDOW     # window must divide rounds
+    telemetry = TelemetryConfig(window=WINDOW)
+    timer = PhaseTimer()
+
+    # --- simulator capture -------------------------------------------
+    trace = app_traces("cfd", PAPER_GEOMETRY, [0],
+                       rounds=sim_rounds)[0]
+    with timer.phase("sim"):
+        res, stl = simulate(SIM_ARCH, trace, PAPER_GEOMETRY,
+                            noc=SIM_NOC, telemetry=telemetry)
+    stl.check(res)                         # conservation, or raise
+    stl.write_json(os.path.join(out_dir, "sim_timeline.json"))
+    stl.write_csv(os.path.join(out_dir, "sim_timeline.csv"))
+    write_trace(os.path.join(out_dir, "sim_trace.json"), stl)
+    sim_cell = {
+        "arch": SIM_ARCH, "noc": SIM_NOC, "app": "cfd",
+        "rounds": sim_rounds, "window": WINDOW,
+        "n_windows": stl.n_windows,
+        "l1_hit_rate": float(res.l1_hit_rate),
+        "l1_latency": float(res.l1_latency),
+        # log2-bucketed: a conservative upper-edge quantile, tracked
+        # for drift (the serving p99 below is the exact one)
+        "p99_latency_bucket": stl.hist_percentile(99),
+    }
+
+    # --- serving capture ---------------------------------------------
+    serve_rounds = rounds if rounds is not None else SERVE_ROUNDS
+    mix = ServingMix(SERVE_MIX, name="+".join(SERVE_MIX))
+    stream = mix.make_stream(n_shards=SERVE_SHARDS,
+                             rounds=serve_rounds, seed=0)
+    with timer.phase("serving"):
+        sres, vtl = serve_stream(SERVE_POLICY, stream, ServingConfig(),
+                                 telemetry=telemetry)
+    vtl.check(sres)                        # conservation, or raise
+    vtl.write_json(os.path.join(out_dir, "serve_timeline.json"))
+    vtl.write_csv(os.path.join(out_dir, "serve_timeline.csv"))
+    write_trace(os.path.join(out_dir, "serve_trace.json"), vtl)
+    serve_cell = {
+        "policy": SERVE_POLICY, "mix": mix.mix_id,
+        "shards": SERVE_SHARDS, "rounds": serve_rounds,
+        "window": WINDOW, "n_windows": vtl.n_windows,
+        "requests": int(sres.n_requests),
+        "hit_rate": float(sres.hit_rate),
+        "hist_exact": bool(sres.hist_exact),
+        "p50_latency": sres.latency_percentile(50),
+        "p99_latency": sres.latency_percentile(99),
+    }
+
+    manifest = run_manifest(phases=timer.phases)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+
+    report = {
+        "kind": "telemetry",
+        "schema": SCHEMA,
+        "config": {"window": WINDOW, "rounds": rounds},
+        "sim": sim_cell,
+        "serving": serve_cell,
+        "manifest": manifest,
+    }
+    for path in filter(None, [os.path.join(out_dir,
+                                           "telemetry_report.json"),
+                              out_json]):
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+    return report
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("out_dir", help="artifact directory (created)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override both capture sizes (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the telemetry report JSON here")
+    args = ap.parse_args()
+    report = capture(args.out_dir, rounds=args.rounds,
+                     out_json=args.json)
+    print(f"telemetry capture ok: sim p99<= "
+          f"{report['sim']['p99_latency_bucket']:.0f}cyc, serving "
+          f"p99={report['serving']['p99_latency']:.1f}cyc "
+          f"-> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,12 @@ reports (``benchmarks.fig_serving_scale``, ``"kind": "serving"``)
 likewise: per (shards x mix x policy x slots) cell, hit rate, modeled
 p99 latency, and host replay throughput become ``serving`` series
 rows, and the batched-admission req/s-ratio headlines (modeled +
-wall, B=max vs B=1) get their own series.
+wall, B=max vs B=1) get their own series. Observability captures
+(``benchmarks.telemetry_capture``, ``"kind": "telemetry"``) contribute
+histogram-derived latency quantiles (the serving p50/p99 are exact
+quantile reads) and hit rates as ``telemetry`` series rows. A missing
+or empty history directory produces a "no history yet" markdown and
+exit 0 — the first nightly run is not a failure.
 """
 import argparse
 import json
@@ -63,6 +68,24 @@ def _cell_series(reports: List[Tuple[str, dict]]
             if ratio is not None:
                 add(run, "simspeed", ("lax/lax_unfused",),
                     "fused_speedup", ratio)
+            continue
+        if rep.get("kind") == "telemetry":
+            # observability smoke captures: histogram-derived latency
+            # quantiles (serving p99 is an *exact* quantile read; the
+            # sim one is a log2-bucket upper edge) + hit rates, so the
+            # latency story trends alongside the throughput one
+            sim = rep.get("sim", {})
+            for metric in ("l1_hit_rate", "p99_latency_bucket"):
+                if sim.get(metric) is not None:
+                    add(run, "telemetry",
+                        (sim.get("arch"), sim.get("noc")), metric,
+                        sim[metric])
+            srv = rep.get("serving", {})
+            for metric in ("hit_rate", "p50_latency", "p99_latency"):
+                if srv.get(metric) is not None:
+                    add(run, "telemetry",
+                        (srv.get("policy"), srv.get("mix"),
+                         srv.get("shards")), metric, srv[metric])
             continue
         if rep.get("kind") == "serving":
             # serving-engine reports: deterministic quality metrics
@@ -99,8 +122,17 @@ def _cell_series(reports: List[Tuple[str, dict]]
 
 
 def load_history(directory: str) -> List[Tuple[str, dict]]:
-    names = sorted(n for n in os.listdir(directory)
-                   if n.endswith(".json"))
+    """Parse every report JSON under ``directory``, oldest first.
+
+    A missing or not-yet-a-directory history (the first nightly run on
+    a fresh cache) is an empty history, not a crash.
+    """
+    try:
+        names = sorted(n for n in os.listdir(directory)
+                       if n.endswith(".json"))
+    except (FileNotFoundError, NotADirectoryError):
+        print(f"no history directory at {directory}", file=sys.stderr)
+        return []
     out = []
     for name in names:
         path = os.path.join(directory, name)
@@ -111,7 +143,7 @@ def load_history(directory: str) -> List[Tuple[str, dict]]:
             print(f"skipping unreadable report {path}: {e}",
                   file=sys.stderr)
             continue
-        if "cells" not in rep:
+        if "cells" not in rep and rep.get("kind") != "telemetry":
             print(f"skipping non-report JSON {path}", file=sys.stderr)
             continue
         out.append((os.path.splitext(name)[0], rep))
@@ -199,8 +231,22 @@ def main() -> int:
 
     reports = load_history(args.history)
     if not reports:
+        # first nightly on a fresh cache: emit valid (empty) outputs
+        # and succeed — "no history yet" is a state, not a failure
         print(f"no reports found under {args.history}", file=sys.stderr)
-        return 1
+        if args.markdown:
+            with open(args.markdown, "w") as f:
+                f.write("# Benchmark trend report\n\n"
+                        "No history yet — this is the first tracked "
+                        "run; trends appear once a report lands in "
+                        f"`{args.history}`.\n")
+        empty_csv = "section,cell,metric,run,value\n"
+        if args.csv:
+            with open(args.csv, "w") as f:
+                f.write(empty_csv)
+        else:
+            sys.stdout.write(empty_csv)
+        return 0
     series = _cell_series(reports)
     rows = trend_rows(series, args.rtol)
 

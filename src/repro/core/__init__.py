@@ -16,6 +16,7 @@ Public API:
   AppStats                    — per-app attribution block on SimResult
   run_app, run_suite, normalized_ipc — experiment drivers
   MixResult, run_mixes        — fairness metrics over co-scheduled mixes
+  TelemetryConfig             — opt-in windowed observability (repro.obs)
 """
 from repro.core.geometry import (GeomScalars, GeomStructure, GpuGeometry,
                                  PAPER_GEOMETRY, split_geometry)
@@ -28,6 +29,7 @@ from repro.core.arch import (ArchPolicy, L1Outcome, RequestBatch, get_arch,
 from repro.core.noc import (NocModel, NocTraffic, NocTransit, PAPER_NOCS,
                             get_noc, register_noc, registered_nocs)
 from repro.core.tagarray import ReplacementPolicy
+from repro.core.telemetry import TelemetryConfig
 from repro.core.trace import (APPS, HIGH_LOCALITY, LOW_LOCALITY, AppParams,
                               WorkloadMix, kernel_params, make_trace)
 from repro.core.metrics import (AppResult, MixResult, MixRun, app_traces,
@@ -45,5 +47,5 @@ __all__ = [
     "ReplacementPolicy", "APPS", "HIGH_LOCALITY", "LOW_LOCALITY", "AppParams",
     "WorkloadMix", "kernel_params", "make_trace", "AppResult", "app_traces",
     "geomean", "normalized_ipc", "run_app", "run_suite", "MixResult",
-    "MixRun", "run_mixes",
+    "MixRun", "run_mixes", "TelemetryConfig",
 ]

@@ -307,6 +307,11 @@ def run_sensitivity(app: str = "HS3D",
         report["noc"] = run_noc_sensitivity(
             app, archs, noc_models, kernels_per_app=kernels_per_app,
             rounds=rounds, geom=geom, n_devices=n_devices)
+    # provenance block; every compare_* gates only the baseline's own
+    # sections, so adding it never breaks committed baselines
+    from repro.obs.manifest import run_manifest
+    report["manifest"] = run_manifest(
+        phases={"sweep": run.report.wall_s})
     return report
 
 

@@ -74,6 +74,7 @@ from repro.core.noc import (NocModel, NocTraffic, get_noc, init_noc_state,
                             registered_nocs)
 from repro.core.probe import (PROBE_BACKENDS,
                               check_probe_backend as _check_probe_backend)
+from repro.core.telemetry import TelemetryConfig, log2_bucket
 
 #: Backwards-compatible alias: the paper's comparison set. The full,
 #: extensible set is ``repro.core.arch.registered_archs()``.
@@ -342,7 +343,8 @@ def _request_batch(geom, addr, is_write) -> RequestBatch:
 
 def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
            geom, insn_per_req, core_app, state, xs, *,
-           probe_backend: str = "lax"):
+           probe_backend: str = "lax",
+           telemetry: Optional[TelemetryConfig] = None):
     """One simulation round. state=(l1, l2, noc, t, stats);
     xs=(addr, is_write).
 
@@ -464,23 +466,36 @@ def _round(policy: ArchPolicy, nocs: Sequence[NocModel], noc_idx,
         "app_lat_n": stats["app_lat_n"]
         .at[core_app].add(all_served.astype(f32)),
     }
+    if telemetry is not None and telemetry.histograms:
+        # log2-bucketed L1-complete latency histogram over served
+        # loads (unserved cores contribute an add of 0 — a no-op).
+        bucket = log2_bucket(l1_complete, telemetry.sim_hist_bins)
+        stats["lat_hist"] = state[4]["lat_hist"] \
+            .at[bucket].add(all_served.astype(jnp.int32))
     return (l1, l2, noc, t + 1, stats), None
 
 
-def _init_stats(geom, n_apps: int = 1) -> Dict[str, jnp.ndarray]:
+def _init_stats(geom, n_apps: int = 1,
+                telemetry: Optional[TelemetryConfig] = None
+                ) -> Dict[str, jnp.ndarray]:
     z = jnp.float32(0.0)
     app = jnp.zeros((n_apps,), jnp.float32)
-    return {"cycles": jnp.zeros((geom.n_cores,), jnp.float32),
-            "l1_lat_sum": z, "l1_lat_n": z, "local_hits": z,
-            "remote_hits": z, "requests": z, "l2_accesses": z,
-            "dram": z, "noc_flits": z,
-            "app_local": app, "app_remote": app,
-            "app_lat_sum": app, "app_lat_n": app}
+    stats = {"cycles": jnp.zeros((geom.n_cores,), jnp.float32),
+             "l1_lat_sum": z, "l1_lat_n": z, "local_hits": z,
+             "remote_hits": z, "requests": z, "l2_accesses": z,
+             "dram": z, "noc_flits": z,
+             "app_local": app, "app_remote": app,
+             "app_lat_sum": app, "app_lat_n": app}
+    if telemetry is not None and telemetry.histograms:
+        stats["lat_hist"] = jnp.zeros((telemetry.sim_hist_bins,),
+                                      jnp.int32)
+    return stats
 
 
 def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
               structure: GeomStructure, n_apps: int = 1,
-              probe_backend: str = "lax"):
+              probe_backend: str = "lax",
+              telemetry: Optional[TelemetryConfig] = None):
     """Scan one grid point through the round pipeline.
 
     ``archs`` is a *dataflow group*: one or more same-dataflow
@@ -498,6 +513,16 @@ def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
     lower structurally different round programs (XLA chain vs Pallas
     kernel), so each gets its own executable rather than a traced
     switch branch.
+
+    ``telemetry`` (static, default ``None``) turns on windowed
+    observability: the scan is restructured into an outer scan over
+    ``rounds/window`` windows of an inner ``window``-round scan, and
+    each outer step emits a *cumulative* snapshot of the stats + NoC
+    carry (key ``"timeline"``, leading window axis). The per-round op
+    sequence is identical to the flat scan, so final counters — and
+    every ``SimResult`` derived from them — are bit-equal with and
+    without telemetry; ``None`` never traces any of this, keeping the
+    default executables byte-identical.
     """
     addr, is_write, insn_per_req, core_app, scalars, policy_idx, \
         noc_idx = point_arrays
@@ -506,24 +531,40 @@ def _sim_core(archs: Tuple[str, ...], nocs: Tuple[str, ...], point_arrays,
     noc_models = [get_noc(n) for n in nocs]
     state = (_l1_state(geom, policies), _l2_state(geom),
              _noc_state(geom, noc_models), jnp.int32(0),
-             _init_stats(geom, n_apps))
+             _init_stats(geom, n_apps, telemetry))
     steps = [functools.partial(_round, p, noc_models, noc_idx, geom,
                                insn_per_req, core_app,
-                               probe_backend=probe_backend)
+                               probe_backend=probe_backend,
+                               telemetry=telemetry)
              for p in policies]
     if len(steps) == 1:
         step = steps[0]
     else:
         def step(carry, xs):
             return jax.lax.switch(policy_idx, steps, carry, xs)
-    (l1, l2, noc, t, stats), _ = jax.lax.scan(step, state,
-                                              (addr, is_write))
-    return {**stats, "noc": noc}
+    if telemetry is None:
+        (l1, l2, noc, t, stats), _ = jax.lax.scan(step, state,
+                                                  (addr, is_write))
+        return {**stats, "noc": noc}
+
+    T = addr.shape[0]
+    W = telemetry.window_for(T)
+    xs = (addr.reshape((T // W, W) + addr.shape[1:]),
+          is_write.reshape((T // W, W) + is_write.shape[1:]))
+
+    def window_step(carry, xs_w):
+        carry, _ = jax.lax.scan(step, carry, xs_w)
+        _, _, noc_w, _, stats_w = carry
+        return carry, {"stats": stats_w, "noc": noc_w}
+
+    (l1, l2, noc, t, stats), snaps = jax.lax.scan(window_step, state, xs)
+    return {**stats, "noc": noc, "timeline": snaps}
 
 
 #: One compilation per (arch group, NoC group, trace shape, geometry
-#: structure, app count, probe backend).
-_simulate = jax.jit(_sim_core, static_argnums=(0, 1, 3, 4, 5))
+#: structure, app count, probe backend, telemetry config — ``None``
+#: keys the exact pre-telemetry executables).
+_simulate = jax.jit(_sim_core, static_argnums=(0, 1, 3, 4, 5, 6))
 
 #: Batched form: vmap over a leading grid-point axis, still one
 #: compilation. ``repro.core.sweep`` adds device sharding on top.
@@ -693,7 +734,8 @@ def trace_kind(trace: Trace) -> tuple:
 def simulate(arch: str, trace: Trace,
              geom: GpuGeometry = PAPER_GEOMETRY, *,
              noc: str = "ideal",
-             probe_backend: str = "lax") -> SimResult:
+             probe_backend: str = "lax",
+             telemetry: Optional[TelemetryConfig] = None):
     """Run a trace through one architecture and summarize.
 
     ``noc`` selects the interconnect model (``repro.core.noc``); the
@@ -702,15 +744,34 @@ def simulate(arch: str, trace: Trace,
     (``repro.core.probe``); every backend returns bit-identical
     results — the axis trades compile target (XLA vs Pallas/Mosaic)
     and speed, never semantics.
+
+    ``telemetry`` (a :class:`~repro.core.telemetry.TelemetryConfig`)
+    turns on windowed observability: the return becomes a
+    ``(SimResult, repro.obs.SimTimeline)`` pair, with the
+    :class:`SimResult` bit-equal to the ``telemetry=None`` run (the
+    window restructuring preserves the per-round op sequence). The
+    default ``None`` compiles and reuses exactly the pre-telemetry
+    executable.
     """
     _check_arch(arch)
     _check_noc(noc)
     _check_probe_backend(probe_backend)
+    if telemetry is not None:
+        telemetry.window_for(trace.addr.shape[0])
     structure, scalars = split_geometry(geom)
     stats = jax.device_get(_simulate(
         (arch,), (noc,), _point_arrays(_trace_arrays(trace), scalars),
-        structure, trace.n_apps, probe_backend))
-    return _summarize(stats, trace)
+        structure, trace.n_apps, probe_backend, telemetry))
+    if telemetry is None:
+        return _summarize(stats, trace)
+    from repro.obs.timeline import SimTimeline   # local: obs sits above core
+    snaps = stats.pop("timeline")
+    result = _summarize(stats, trace)
+    tl = SimTimeline.from_snapshots(
+        snaps, telemetry, rounds=trace.addr.shape[0],
+        meta={"arch": arch, "noc": noc, "n_apps": trace.n_apps,
+              "n_cores": trace.n_cores})
+    return result, tl
 
 
 def simulate_batch(arch: str, traces: Sequence[Trace],

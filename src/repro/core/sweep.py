@@ -63,6 +63,7 @@ from repro.core.geometry import (GeomStructure, GpuGeometry, PAPER_GEOMETRY,
 from repro.core.simulator import (SimResult, Trace, _check_arch, _check_noc,
                                   _sim_core, _summarize, round_signature,
                                   trace_kind)
+from repro.core.telemetry import TelemetryConfig
 from repro.core.arch import get_arch, registered_archs
 from repro.core.noc import get_noc, registered_nocs
 from repro.core.probe import check_probe_backend
@@ -104,6 +105,9 @@ class SweepReport:
 class SweepRun(NamedTuple):
     results: List[SimResult]     # aligned with SweepGrid.points
     report: SweepReport
+    #: per-point ``repro.obs.SimTimeline`` list (aligned with points)
+    #: when :meth:`SweepGrid.run` was given a telemetry config
+    timelines: Optional[list] = None
 
 
 #: Process-wide set of executable keys already compiled, for compile
@@ -122,9 +126,11 @@ def compile_count() -> int:
 def _sharded_executable(group: Tuple[str, ...], nocs: Tuple[str, ...],
                         structure: GeomStructure,
                         n_devices: int, n_apps: int,
-                        probe_backend: str = "lax"):
+                        probe_backend: str = "lax",
+                        telemetry: Optional[TelemetryConfig] = None):
     """The jitted, device-sharded, vmapped simulator for one bucket."""
-    key = (group, nocs, structure, n_devices, n_apps, probe_backend)
+    key = (group, nocs, structure, n_devices, n_apps, probe_backend,
+           telemetry)
     fn = _EXEC_MEMO.get(key)
     if fn is None:
         mesh = make_mesh_1d(n_devices, "grid")
@@ -132,7 +138,8 @@ def _sharded_executable(group: Tuple[str, ...], nocs: Tuple[str, ...],
         def local_batch(point_arrays):
             return jax.vmap(
                 lambda pa: _sim_core(group, nocs, pa, structure,
-                                     n_apps, probe_backend))(point_arrays)
+                                     n_apps, probe_backend,
+                                     telemetry))(point_arrays)
 
         # Pallas backends embed a pallas_call, which has no shard_map
         # replication rule — disable the check for those buckets only
@@ -327,9 +334,21 @@ class SweepGrid:
                             "they cannot stack into one executable; "
                             f"give {noc!r} its own stack_key")
 
-    def run(self, n_devices: Optional[int] = None) -> SweepRun:
-        """Sweep every grid point; one sharded dispatch per bucket."""
+    def run(self, n_devices: Optional[int] = None, *,
+            telemetry: Optional[TelemetryConfig] = None) -> SweepRun:
+        """Sweep every grid point; one sharded dispatch per bucket.
+
+        ``telemetry`` (static, hashable) threads windowed
+        observability through every bucket: the returned
+        :class:`SweepRun` gains a per-point ``timelines`` list
+        (``repro.obs.SimTimeline``, aligned with :attr:`points`) and
+        per-point results stay bit-equal to the default run. ``None``
+        reuses exactly the pre-telemetry executables.
+        """
         t0 = time.perf_counter()
+        if telemetry is not None:
+            for p in self.points:
+                telemetry.window_for(p.trace.addr.shape[0])
         avail = len(jax.devices())
         D = max(1, min(n_devices or avail, avail))
 
@@ -363,6 +382,8 @@ class SweepGrid:
             buckets.setdefault(key, []).append(i)
 
         results: List[Optional[SimResult]] = [None] * len(self.points)
+        timelines: Optional[list] = (
+            [None] * len(self.points) if telemetry is not None else None)
         used_execs: set = set()
         new_compiles = 0
         for (group, noc_group, structure, kind, backend), idxs \
@@ -393,20 +414,30 @@ class SweepGrid:
             noc_idx = jnp.asarray(
                 [noc_group.index(p.noc) for p in pts], jnp.int32)
             exec_key = (group, noc_group, structure, kind, backend,
-                        B + pad, D)
+                        B + pad, D, telemetry)
             used_execs.add(exec_key)
             if exec_key not in _COMPILED_KEYS:
                 _COMPILED_KEYS.add(exec_key)
                 new_compiles += 1
             fn = _sharded_executable(group, noc_group, structure, D,
-                                     n_apps, backend)
+                                     n_apps, backend, telemetry)
             stats = jax.device_get(
                 fn((addr, is_write, insn, core_app, scalars, policy_idx,
                     noc_idx)))
+            snaps = stats.pop("timeline", None)
             for b, i in enumerate(idxs):
+                p = self.points[i]
                 results[i] = _summarize(
-                    jax.tree.map(lambda a: a[b], stats),
-                    self.points[i].trace)
+                    jax.tree.map(lambda a: a[b], stats), p.trace)
+                if telemetry is not None:
+                    from repro.obs.timeline import SimTimeline
+                    timelines[i] = SimTimeline.from_snapshots(
+                        jax.tree.map(lambda a: a[b], snaps), telemetry,
+                        rounds=p.trace.addr.shape[0],
+                        meta={"arch": p.arch, "noc": p.noc,
+                              "n_apps": p.trace.n_apps,
+                              "n_cores": p.trace.n_cores,
+                              "probe_backend": p.probe_backend})
 
         report = SweepReport(
             n_points=len(self.points),
@@ -415,4 +446,5 @@ class SweepGrid:
             n_devices=D,
             wall_s=time.perf_counter() - t0,
         )
-        return SweepRun(results=results, report=report)  # type: ignore
+        return SweepRun(results=results, report=report,  # type: ignore
+                        timelines=timelines)

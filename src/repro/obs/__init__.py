@@ -1,0 +1,32 @@
+"""Observability exporters over ``repro.core.telemetry`` captures.
+
+``repro.core`` owns the device-side capture (the static ``telemetry=``
+argument on ``simulate`` / ``SweepGrid.run`` / ``serve_stream``); this
+package owns everything host-side and downstream of it:
+
+* :mod:`repro.obs.timeline` — :class:`SimTimeline` /
+  :class:`ServeTimeline`: per-window counter series with exact
+  conservation checks (window sums == run totals), window re-binning,
+  and CSV/JSON series export for ``scripts/bench_trend.py``.
+* :mod:`repro.obs.perfetto` — Chrome-trace-event JSON export (one
+  track per core/shard/link, counter tracks for queue depth and hit
+  rate), loadable in Perfetto / ``chrome://tracing``.
+* :mod:`repro.obs.manifest` — run manifests (git sha, jax version,
+  backend, device count, compile counts, XLA cost analysis, per-phase
+  wall clock) attached to every benchmark report.
+
+Layering: ``repro.obs`` imports from ``repro.core`` (the counter
+registry) and ``repro.serving``; never the reverse at module scope —
+``simulate``/``serve_stream`` import the timeline classes lazily
+inside their telemetry branches.
+"""
+from repro.obs.manifest import PhaseTimer, run_manifest
+from repro.obs.perfetto import trace_events, validate_trace, write_trace
+from repro.obs.timeline import (ConservationError, ServeTimeline,
+                                SimTimeline)
+
+__all__ = [
+    "SimTimeline", "ServeTimeline", "ConservationError",
+    "trace_events", "validate_trace", "write_trace",
+    "PhaseTimer", "run_manifest",
+]

@@ -77,7 +77,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,8 @@ import numpy as np
 
 from repro.core.geometry import GpuGeometry
 from repro.core.noc import NocTraffic, get_noc, init_noc_state
+from repro.core.telemetry import (TelemetryConfig, hist_quantile,
+                                  serving_hist_bins)
 from repro.kernels.ata_tag_probe import ata_tag_probe
 
 SERVING_POLICIES = ("private", "broadcast", "ata")
@@ -164,6 +166,11 @@ class ServeResult(NamedTuple):
     noc_injected: float
     noc_delivered: float
     noc_queued: float
+    #: value-resolved modeled-latency bincount (telemetry runs only)
+    lat_hist: Optional[np.ndarray] = None
+    #: histogram quantiles reproduce np.percentile exactly (integral
+    #: cost model + ideal NoC)
+    hist_exact: bool = False
 
     @property
     def hit_rate(self) -> float:
@@ -175,6 +182,11 @@ class ServeResult(NamedTuple):
         return self.latency[self.served]
 
     def latency_percentile(self, q: float) -> float:
+        if self.lat_hist is not None and self.hist_exact:
+            # exact quantile read from the histogram — bit-identical
+            # to np.percentile over the materialized latency array
+            return hist_quantile(self.lat_hist, q) \
+                if self.lat_hist.sum() else 0.0
         lat = self.request_latencies
         return float(np.percentile(lat, q)) if lat.size else 0.0
 
@@ -224,13 +236,21 @@ def _probe_all(tags, h, set_idx, *, backend):
 
 
 def _make_chunk_fn(policy: str, cfg: ServingConfig, B: int, C: int,
-                   K: int):
+                   K: int,
+                   telemetry: Optional[TelemetryConfig] = None):
     """Build the per-chunk scan body for one executable-cache key.
 
     The returned function replays ``steps`` admission rounds of ``B``
     sub-rounds each: ``(carry, xs) -> (carry, outs)`` with
     ``carry = {dir, noc, t}`` (donated) and ``outs`` the per-chunk
     emissions the host reduces in wide arithmetic.
+
+    ``telemetry`` (static) additionally emits a per-chunk
+    value-resolved latency bincount (``hist``, one int32 bucket per
+    modeled cycle up to the :func:`_check_headroom` bound, last bucket
+    absorbs non-ideal-NoC overflow) and the per-admission-round probe
+    message series (``pm_steps``) for the windowed timeline. The
+    ``None`` default traces exactly the pre-telemetry chunk program.
     """
     S, W = cfg.n_sets, cfg.n_ways
     geom = cfg.geometry(C)
@@ -353,24 +373,51 @@ def _make_chunk_fn(policy: str, cfg: ServingConfig, B: int, C: int,
         # reused blocks (int32 is safe — a chunk is bounded)
         shard_load = jnp.zeros((C + 1,), i32) \
             .at[ys.pop("slidx").reshape(-1)].add(1)[:C]
-        return carry, dict(ys, pm=ys["pm"].sum(), shard_load=shard_load)
+        outs = dict(ys, pm=ys["pm"].sum(), shard_load=shard_load)
+        if telemetry is not None:
+            outs["pm_steps"] = ys["pm"]              # (steps,)
+            if telemetry.histograms:
+                nb = serving_hist_bins(_max_latency(cfg, K))
+                idx = jnp.clip(ys["lat"], 0.0, nb - 1).astype(i32)
+                outs["hist"] = jnp.zeros((nb,), i32) \
+                    .at[idx.reshape(-1)] \
+                    .add(xs[0].reshape(-1).astype(i32))
+        return carry, outs
 
     return chunk
 
 
-#: Keyed executable cache: (policy, cfg, slots, C, K, steps) -> the
-#: donated-carry chunk executable. All replays sharing a key — every
-#: cell of the benchmark grid with the same policy/backend/B/geometry,
-#: any number of rounds — reuse one compiled chunk.
+def _max_latency(cfg: ServingConfig, K: int) -> float:
+    """Per-request modeled-latency bound under an ideal NoC."""
+    return K * max(cfg.lat_hit, cfg.lat_fetch, cfg.lat_recompute) \
+        + cfg.lat_probe_rtt
+
+
+def _integral_cost_model(cfg: ServingConfig) -> bool:
+    """True when every latency term is a whole number of cycles and
+    the NoC adds none — the regime where the value-resolved histogram
+    reconstructs ``np.percentile`` exactly."""
+    return cfg.noc == "ideal" and all(
+        float(v).is_integer() for v in (cfg.lat_hit, cfg.lat_fetch,
+                                        cfg.lat_recompute,
+                                        cfg.lat_probe_rtt))
+
+
+#: Keyed executable cache: (policy, cfg, slots, C, K, steps,
+#: telemetry) -> the donated-carry chunk executable. All replays
+#: sharing a key — every cell of the benchmark grid with the same
+#: policy/backend/B/geometry, any number of rounds — reuse one
+#: compiled chunk; ``telemetry=None`` keys the pre-telemetry programs.
 _EXECUTABLES: Dict[tuple, jax.stages.Compiled] = {}
 
 
 def _get_executable(policy: str, cfg: ServingConfig, B: int, C: int,
-                    K: int, steps: int):
-    key = (policy, cfg, B, C, K, steps)
+                    K: int, steps: int,
+                    telemetry: Optional[TelemetryConfig] = None):
+    key = (policy, cfg, B, C, K, steps, telemetry)
     exe = _EXECUTABLES.get(key)
     if exe is None:
-        fn = jax.jit(_make_chunk_fn(policy, cfg, B, C, K),
+        fn = jax.jit(_make_chunk_fn(policy, cfg, B, C, K, telemetry),
                      donate_argnums=(0,))
         sds = jax.ShapeDtypeStruct
         i32, f32 = jnp.int32, jnp.float32
@@ -413,8 +460,7 @@ def _check_headroom(policy: str, cfg: ServingConfig, T: int, C: int,
             f"broadcast probe messages per {_CHUNK_SUBROUNDS}-sub-round "
             f"chunk overflow int32 at {C} shards x {K} blocks")
     # per-request latency must stay f32-exact for integer cost models
-    max_lat = K * max(cfg.lat_hit, cfg.lat_fetch, cfg.lat_recompute) \
-        + cfg.lat_probe_rtt
+    max_lat = _max_latency(cfg, K)
     if max_lat >= 2.0 ** 24:
         raise ValueError(
             f"per-request latency bound {max_lat:.3g} exceeds the f32 "
@@ -422,13 +468,24 @@ def _check_headroom(policy: str, cfg: ServingConfig, T: int, C: int,
 
 
 def serve_stream(policy: str, stream,
-                 cfg: ServingConfig = ServingConfig()) -> ServeResult:
+                 cfg: ServingConfig = ServingConfig(), *,
+                 telemetry: Optional[TelemetryConfig] = None):
     """Replay ``stream`` under ``policy``; returns a :class:`ServeResult`.
 
     ``stream`` is a :class:`~repro.core.trace.serving.RequestStream`
     (build one with :class:`~repro.core.trace.serving.ServingMix`);
     ``stream.slots`` selects batched admission — counters are
     slot-order exact for every ``B`` (see the module docstring).
+
+    ``telemetry`` (a :class:`~repro.core.telemetry.TelemetryConfig`)
+    turns on windowed observability: the return becomes a
+    ``(ServeResult, repro.obs.ServeTimeline)`` pair, the result gains
+    its device-side latency histogram (``lat_hist`` — percentile
+    properties become exact histogram reads under the default integral
+    cost model), and all counters stay bit-equal to the
+    ``telemetry=None`` replay (the chunk program only *adds*
+    emissions). ``None`` compiles and reuses exactly the
+    pre-telemetry executables.
     """
     if policy not in SERVING_POLICIES:
         raise ValueError(f"policy must be one of {SERVING_POLICIES}, "
@@ -455,7 +512,7 @@ def serve_stream(policy: str, stream,
     xs_hashes = jnp.asarray(padded(stream.hashes).reshape(shape + (K,)))
     xs_blocks = jnp.asarray(padded(stream.n_blocks).reshape(shape))
 
-    exe = _get_executable(policy, cfg, B, C, K, steps)
+    exe = _get_executable(policy, cfg, B, C, K, steps, telemetry)
     carry = dict(
         dir=jnp.zeros((C, cfg.n_sets, cfg.n_ways, 2), jnp.int32),
         noc=init_noc_state(get_noc(cfg.noc).n_links(cfg.geometry(C))),
@@ -463,6 +520,10 @@ def serve_stream(policy: str, stream,
     lat_parts, nl_parts, nr_parts, nc_parts = [], [], [], []
     probe_messages = 0
     shard_load = np.zeros(C, np.int64)
+    with_hist = telemetry is not None and telemetry.histograms
+    lat_hist = (np.zeros(serving_hist_bins(_max_latency(cfg, K)),
+                         np.int64) if with_hist else None)
+    pm_parts = []
     for i in range(n_chunks):
         carry, outs = exe(
             carry, (xs_valid[i], xs_hashes[i], xs_blocks[i]))
@@ -472,6 +533,10 @@ def serve_stream(policy: str, stream,
         nc_parts.append(np.asarray(outs["nc"]))
         probe_messages += int(outs["pm"])
         shard_load += np.asarray(outs["shard_load"], np.int64)
+        if telemetry is not None:
+            pm_parts.append(np.asarray(outs["pm_steps"], np.int64))
+        if with_hist:
+            lat_hist += np.asarray(outs["hist"], np.int64)
 
     # host-side wide reduction of the emitted per-sub-round grids
     # (int64 / float64 — the overflow-headroom accumulators)
@@ -497,7 +562,7 @@ def serve_stream(policy: str, stream,
 
     ones = np.ones_like(served, np.int64)
     nstate = carry["noc"]
-    return ServeResult(
+    result = ServeResult(
         policy=policy,
         n_requests=stream.n_requests,
         local_hits=local_hits,
@@ -521,7 +586,23 @@ def serve_stream(policy: str, stream,
         noc_injected=float(nstate["injected"]),
         noc_delivered=float(nstate["delivered"]),
         noc_queued=float(nstate["queue"].sum()),
+        lat_hist=lat_hist,
+        hist_exact=with_hist and _integral_cost_model(cfg),
     )
+    if telemetry is None:
+        return result
+    from repro.obs.timeline import ServeTimeline  # obs sits above serving
+    pm_rounds = np.concatenate(pm_parts)[:T // B]
+    cycles_rounds = np.max(lat.reshape(-1, B * C), axis=1)
+    timeline = ServeTimeline.from_grids(
+        window=telemetry.window, slots=B, served=served,
+        nl=nl, nr=nr, nc=nc, lat=lat, pm_rounds=pm_rounds,
+        cycles_rounds=cycles_rounds,
+        tenant=np.asarray(stream.tenant), n_tenants=nt,
+        hist=lat_hist, hist_exact=result.hist_exact,
+        meta={"policy": policy, "slots": B, "shards": C,
+              "noc": cfg.noc, "tenants": "+".join(stream.tenants)})
+    return result, timeline
 
 
 def compile_count() -> int:

@@ -189,9 +189,56 @@ def test_cli_writes_outputs_and_strict_gates(history, tmp_path):
         [sys.executable, SCRIPT, str(solo_dir), "--strict"],
         capture_output=True, text=True)
     assert r.returncode == 0 and "0 flagged" in r.stderr
-    # empty history is an error
+    # empty history: "no history yet" markdown + header-only CSV,
+    # exit 0 — the first nightly on a fresh cache is not a failure
     empty = tmp_path / "empty"
     empty.mkdir()
-    r = subprocess.run([sys.executable, SCRIPT, str(empty)],
+    md0 = str(tmp_path / "empty.md")
+    r = subprocess.run([sys.executable, SCRIPT, str(empty),
+                        "--markdown", md0],
                        capture_output=True, text=True)
-    assert r.returncode == 1
+    assert r.returncode == 0, r.stderr
+    assert "No history yet" in open(md0).read()
+    assert r.stdout == "section,cell,metric,run,value\n"
+    # a missing directory behaves like an empty one
+    r = subprocess.run(
+        [sys.executable, SCRIPT, str(tmp_path / "never_made")],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    assert "no history directory" in r.stderr
+
+
+def _telemetry(hit=0.36, p50=288.0, p99=720.0):
+    return {
+        "kind": "telemetry", "schema": 1,
+        "config": {"window": 32, "rounds": None},
+        "sim": {"arch": "ata", "noc": "crossbar", "app": "cfd",
+                "l1_hit_rate": 0.28, "l1_latency": 33.0,
+                "p99_latency_bucket": 64.0},
+        "serving": {"policy": "ata", "mix": "chat+rag", "shards": 8,
+                    "hit_rate": hit, "hist_exact": True,
+                    "p50_latency": p50, "p99_latency": p99},
+    }
+
+
+def test_telemetry_reports_join_the_series(tmp_path):
+    """Observability captures have no ``cells`` list but still trend:
+    histogram-derived latency quantiles and hit rates become
+    ``telemetry`` series rows alongside the other report kinds."""
+    d = tmp_path / "bench_history"
+    d.mkdir()
+    (d / "2026-08-08.json").write_text(json.dumps(_report(20.0)))
+    (d / "2026-08-08_telemetry.json").write_text(
+        json.dumps(_telemetry()))
+    (d / "2026-08-09_telemetry.json").write_text(
+        json.dumps(_telemetry(p99=726.0)))
+    series = bench_trend._cell_series(bench_trend.load_history(str(d)))
+    assert [v for _, v in
+            series[("telemetry", "ata", "chat+rag", 8, "p99_latency")]] \
+        == [720.0, 726.0]
+    assert ("telemetry", "ata", "crossbar", "p99_latency_bucket") \
+        in series
+    assert ("telemetry", "ata", "chat+rag", 8, "p50_latency") in series
+    assert ("solo", "ata", "noc_bw", 16.0, "ipc") in series
+    rows = bench_trend.trend_rows(series, rtol=0.05)
+    assert all(not r["flagged"] for r in rows)
